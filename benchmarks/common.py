@@ -1,0 +1,50 @@
+"""Shared helpers for the paper-table benchmarks."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+FIELD_SET = ["nyx-like", "s3d-like", "hedm-like", "eeg-like"]
+BASES = ["szlike", "zfplike", "sperrlike"]
+
+
+def timer(fn: Callable, repeat: int = 1):
+    """Return (result, best seconds)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def save_results(name: str, rows: List[Dict]):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=_np_safe)
+
+
+def _np_safe(o):
+    if isinstance(o, (np.floating, np.integer)):
+        return o.item()
+    raise TypeError(type(o))
+
+
+def print_csv(rows: List[Dict], cols: List[str]):
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in cols))
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

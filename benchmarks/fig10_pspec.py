@@ -1,0 +1,56 @@
+"""Paper Fig. 10: power-spectrum preservation with pointwise bounds.
+
+FFCz with pspec_rel=0.1% must keep every shell of P(k) within the ribbon;
+the base compressor at the same bitrate drifts outside.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_results
+from repro.compressors import get_compressor
+from repro.core.ffcz import FFCz, FFCzConfig
+from repro.core.spectrum import bitrate, power_spectrum_relative_error
+from repro.data.fields import make_field
+
+PSPEC_REL = 1e-3
+
+
+def run(quick: bool = False):
+    rows = []
+    x = make_field("nyx-like")[:48, :48, :48] if not quick else make_field("nyx-like")[:32, :32, :32]
+    base = get_compressor("szlike")
+    c = FFCz(base, FFCzConfig(E_rel=1e-3, Delta_rel=None, pspec_rel=PSPEC_REL, max_iters=2500))
+    xh, blob = c.roundtrip(x)
+    _, rel_ours = power_spectrum_relative_error(xh, x)
+    rate = bitrate(blob.stats.total_bytes, x.size)
+
+    # base at the same bitrate: loosen E until bytes match
+    E = 1e-3 * np.ptp(x)
+    target = blob.stats.total_bytes
+    bb = base.compress(x, E)
+    for _ in range(12):
+        if len(bb) <= target * 1.05:
+            break
+        E *= 1.5
+        bb = base.compress(x, E)
+    xb = base.decompress(bb)
+    _, rel_base = power_spectrum_relative_error(xb, x)
+
+    rows.append({
+        "bench": "fig10", "method": "ffcz", "bitrate": rate,
+        "max_abs_rel_pspec_err": float(np.abs(rel_ours[1:]).max()),
+        "within_ribbon": bool(np.abs(rel_ours[1:]).max() <= PSPEC_REL * 1.05),
+        "iterations": blob.stats.iterations,
+    })
+    rows.append({
+        "bench": "fig10", "method": "sz-native", "bitrate": bitrate(len(bb), x.size),
+        "max_abs_rel_pspec_err": float(np.abs(rel_base[1:]).max()),
+        "within_ribbon": bool(np.abs(rel_base[1:]).max() <= PSPEC_REL * 1.05),
+    })
+    save_results("fig10_pspec", rows)
+    return rows
+
+
+COLUMNS = ["bench", "method", "bitrate", "max_abs_rel_pspec_err", "within_ribbon", "iterations"]

@@ -1,0 +1,41 @@
+"""Paper Fig. 8: PSNR vs bitrate in the SPATIAL domain — FFCz edits must not
+degrade spatial quality at matched bitrate."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_results
+from repro.compressors import get_compressor
+from repro.core.ffcz import FFCz, FFCzConfig
+from repro.core.spectrum import bitrate, psnr
+from repro.data.fields import make_field
+
+
+def run(quick: bool = False):
+    rows = []
+    x = make_field("nyx-like")
+    xj = jnp.asarray(x)
+    base = get_compressor("szlike")
+    for e_rel in ([1e-3] if quick else [1e-2, 1e-3, 1e-4]):
+        E = e_rel * np.ptp(x)
+        blob = base.compress(x, E)
+        xh = base.decompress(blob)
+        rows.append({
+            "bench": "fig8", "method": "sz-native", "E_rel": e_rel,
+            "bitrate": bitrate(len(blob), x.size),
+            "psnr_db": float(psnr(jnp.asarray(xh), xj)),
+        })
+        c = FFCz(base, FFCzConfig(E_rel=e_rel, Delta_rel=1e-3, max_iters=1500))
+        xh2, fblob = c.roundtrip(x)
+        rows.append({
+            "bench": "fig8", "method": "ffcz", "E_rel": e_rel,
+            "bitrate": bitrate(fblob.stats.total_bytes, x.size),
+            "psnr_db": float(psnr(jnp.asarray(xh2), xj)),
+        })
+    save_results("fig8_psnr", rows)
+    return rows
+
+
+COLUMNS = ["bench", "method", "E_rel", "bitrate", "psnr_db"]

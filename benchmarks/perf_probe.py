@@ -1,0 +1,65 @@
+"""Perf-iteration probe: compile one cell and print the trip-aware collective
+attribution + roofline terms.  The §Perf hillclimb's measurement tool.
+
+  PYTHONPATH=src python -m benchmarks.perf_probe --arch qwen2-7b --shape train_4k
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+import jax  # noqa: E402
+
+
+def probe(arch: str, shape: str, multi_pod: bool = False, overrides=None, top: int = 14):
+    from repro.configs import get_config
+    from repro.launch.hlo_cost import analyze_hlo
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import make_step
+
+    cfg = get_config(arch, **(overrides or {}))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    step, args, in_sh, out_sh = make_step(cfg, shape, mesh)
+    with mesh:
+        compiled = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(*args).compile()
+    cost = analyze_hlo(compiled.as_text())
+
+    from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, model_flops, model_memory_bytes
+
+    n_dev = 512 if multi_pod else 256
+    coll = sum(cost.collectives.values())
+    mf = model_flops(arch, shape, n_dev)
+    terms = {
+        "compute_s": cost.flops / PEAK_FLOPS,
+        "memory_s": model_memory_bytes(arch, shape, n_dev) / HBM_BW,
+        "collective_s": coll / LINK_BW,
+    }
+    bound = max(terms.values())
+    print(f"== {arch} x {shape} ==")
+    for k, v in terms.items():
+        print(f"  {k:14s} {v:.4e}")
+    print(f"  dominant       {max(terms, key=terms.get)}")
+    print(f"  useful_ratio   {mf / cost.flops:.3f}")
+    print(f"  roofline_frac  {(mf / PEAK_FLOPS) / bound:.4f}")
+    print(f"  collective breakdown (trip-aware, top {top}):")
+    items = sorted(cost.coll_by_name.items(), key=lambda kv: -kv[1])[:top]
+    for (kind, name), b in items:
+        print(f"    {b:.3e} B  {kind:12s} {name[:110]}")
+    return cost, terms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=14)
+    args = ap.parse_args()
+    probe(args.arch, args.shape, args.multi, top=args.top)
+
+
+if __name__ == "__main__":
+    main()

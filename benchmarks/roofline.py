@@ -1,0 +1,216 @@
+"""Roofline analysis from the compiled dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, from dryrun_*.json (per-DEVICE numbers — the
+compiled module is the SPMD per-device program):
+
+  compute term    = HLO_FLOPs / peak_FLOPs          (197 TF/s bf16, v5e)
+  memory term     = HLO_bytes  / HBM_bw             (819 GB/s)
+  collective term = collective_bytes / link_bw      (~50 GB/s/link ICI)
+
+plus MODEL_FLOPS (6*N_active*tokens for train, 2*N_active*tokens for
+inference) vs HLO_FLOPs — the useful-compute ratio that exposes remat and
+masked-causal waste.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / ICI link
+
+_PARAM_CACHE: Dict[str, Dict[str, float]] = {}
+
+
+def _param_counts(arch: str) -> Dict[str, float]:
+    """(total, active, embed) param counts from the abstract init tree."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    from repro.configs import get_config
+    from repro.models.model import build_model
+
+    cfg = get_config(arch)
+    tree = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+    total = active = embed = 0.0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        n = float(np.prod(leaf.shape))
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        total += n
+        if any(k in names for k in ("embed", "lm_head")):
+            embed += n
+            active += n
+            continue
+        if "moe" in names and names[-1] in ("w_gate", "w_up", "w_down"):
+            active += n * cfg.top_k / cfg.n_experts
+        else:
+            active += n
+    out = {"total": total, "active": active, "embed": embed}
+    _PARAM_CACHE[arch] = out
+    return out
+
+
+def _attn_layers(cfg) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    if cfg.family == "audio":
+        return cfg.n_layers + cfg.encoder_layers  # + cross attn ~ self-sized
+    return cfg.n_layers
+
+
+def model_flops(arch: str, shape_id: str, n_devices: int) -> float:
+    """Per-device useful model FLOPs: 6/2 * N_active * tokens (matmul params)
+    plus causal attention score/value GEMMs (2 * b * s^2/2 * heads*hd * 2
+    GEMMs, x3 for train's fwd+bwd)."""
+    from repro.configs import SHAPES, get_config
+
+    seq, batch, kind = SHAPES[shape_id]
+    cfg = get_config(arch)
+    pc = _param_counts(arch)
+    n_active = pc["active"] - pc["embed"]  # matmul-participating params
+    la = _attn_layers(cfg)
+    hqd = cfg.n_heads * cfg.resolved_head_dim if (cfg.n_heads and la) else 0
+    if kind == "train":
+        tokens = seq * batch
+        attn = 3.0 * la * 2.0 * batch * (seq**2 / 2.0) * hqd * 2.0
+        return (6.0 * n_active * tokens + attn) / n_devices
+    if kind == "prefill":
+        tokens = seq * batch
+        attn = la * 2.0 * batch * (seq**2 / 2.0) * hqd * 2.0
+        return (2.0 * n_active * tokens + attn) / n_devices
+    # decode: one token per sequence against a seq-long cache
+    attn = la * 2.0 * batch * seq * hqd * 2.0
+    return (2.0 * n_active * batch + attn) / n_devices
+
+
+def model_memory_bytes(arch: str, shape_id: str, n_devices: int) -> float:
+    """Per-device HBM bytes per step — analytic, assuming a well-fused TPU
+    program (flash attention resident in VMEM, fused elementwise).
+
+    train:   weights bf16 read fwd + bwd + remat re-read (3 x 2B x P) +
+             grads fp32 R/W (8B) + AdamW moments fp32 R+W (16B) + master
+             params R/W (8B) + activation checkpoints (~6 x b*s*d per layer)
+    prefill: weights 2B x P + KV writes + 2 x b*s*d activations per layer
+    decode:  weights 2B x P + full KV cache read + 1-token write
+    """
+    from repro.configs import SHAPES, get_config
+
+    seq, batch, kind = SHAPES[shape_id]
+    cfg = get_config(arch)
+    pc = _param_counts(arch)
+    P = pc["total"] / n_devices
+    # per-device batch: batch is sharded over the DP axes (16 or 32 ways)
+    dp = 16 if n_devices == 256 else 32
+    b_dev = max(batch // dp, 1)
+    la = _attn_layers(cfg)
+    kv_row = 2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2 if la else 0  # k+v, bf16
+    d = cfg.d_model
+    L = cfg.n_layers
+    if kind == "train":
+        weights = 3 * 2 * P
+        opt = (8 + 16 + 8) * P
+        acts = 6 * L * b_dev * seq * d * 2
+        return weights + opt + acts
+    if kind == "prefill":
+        weights = 2 * P
+        kv = la * b_dev * seq * kv_row
+        acts = 2 * L * b_dev * seq * d * 2
+        return weights + kv + acts
+    # decode
+    weights = 2 * P
+    kv_read = la * b_dev * seq * kv_row
+    ssm_state = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        ssm_state = L * b_dev * cfg.ssm_nheads * cfg.ssm_headdim * cfg.ssm_state * 4 * 2
+    return weights + kv_read + ssm_state
+
+
+def analyze(results_path: str) -> List[Dict]:
+    with open(results_path) as f:
+        cells = json.load(f)
+    rows = []
+    for c in cells:
+        if not c.get("ok"):
+            if c.get("skipped"):
+                rows.append({"arch": c["arch"], "shape": c["shape"], "skipped": True,
+                             "reason": c.get("reason", "")})
+            continue
+        n_dev = 512 if c["mesh"] == "2x16x16" else 256
+        t_comp = c["flops"] / PEAK_FLOPS
+        # memory term: analytic well-fused model (the HLO byte walk assumes
+        # zero fusion and is kept in the record as an upper bound only)
+        t_mem = model_memory_bytes(c["arch"], c["shape"], n_dev) / HBM_BW
+        coll = sum(c["collective_bytes"].values())
+        t_coll = coll / LINK_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(c["arch"], c["shape"], n_dev)
+        ratio = mf / c["flops"] if c["flops"] else 0.0
+        bound_time = max(terms.values())
+        mfu = (mf / PEAK_FLOPS) / bound_time if bound_time > 0 else 0.0
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+            "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+            "dominant": dominant,
+            "model_flops": mf, "hlo_flops": c["flops"],
+            "useful_ratio": ratio,
+            "roofline_fraction": mfu,
+            "collective_breakdown": c["collective_bytes"],
+            "hint": _hint(dominant, ratio, c),
+        })
+    return rows
+
+
+def _hint(dominant: str, ratio: float, c: Dict) -> str:
+    if dominant == "collective":
+        big = max(c["collective_bytes"], key=c["collective_bytes"].get) if c["collective_bytes"] else "?"
+        return f"cut {big} volume (resharding/FSDP schedule) to move the collective term down"
+    if dominant == "memory":
+        return "fuse/cached-layout the dominant HBM streams (KV cache, activations) to move the memory term down"
+    if ratio < 0.4:
+        return "compute-bound with low useful ratio: kill remat/masked-causal waste first"
+    return "compute-bound near useful peak: only kernel-level wins (MXU util) remain"
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | dominant "
+           "| useful ratio | roofline frac |\n|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped | — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} |\n"
+        )
+    return "".join(out)
+
+
+def run(quick: bool = False):
+    path = os.environ.get("DRYRUN_RESULTS", "dryrun_single.json")
+    if not os.path.exists(path):
+        return [{"bench": "roofline", "note": f"no dry-run results at {path}; run repro.launch.dryrun first"}]
+    rows = analyze(path)
+    from benchmarks.common import save_results
+
+    save_results("roofline", rows)
+    out = []
+    for r in rows:
+        if r.get("skipped"):
+            continue
+        out.append({"bench": "roofline", "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                    "dominant": r["dominant"], "useful_ratio": round(r["useful_ratio"], 3),
+                    "roofline_fraction": round(r["roofline_fraction"], 3)})
+    return out
+
+
+COLUMNS = ["bench", "arch", "shape", "mesh", "dominant", "useful_ratio", "roofline_fraction", "note"]

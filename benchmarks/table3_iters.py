@@ -1,0 +1,50 @@
+"""Paper Table III: iterations / active edits / time vs frequency bound.
+
+Reproduces the regime structure: moderate Delta => many iterations and few
+active edits; tiny Delta (f-cube inside s-cube) => 1 iteration, zero spatial
+edits, many frequency edits.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import save_results
+from repro.compressors import get_compressor
+from repro.core.ffcz import FFCz, FFCzConfig
+from repro.data.fields import make_field
+
+
+def run(quick: bool = False):
+    rows = []
+    x = make_field("nyx-like")
+    base = get_compressor("szlike")
+    deltas = [1e-2, 1e-3] if quick else [1e-2, 1e-3, 1e-4, 1e-5]
+    for d_rel in deltas:
+        c = FFCz(base, FFCzConfig(E_rel=1e-3, Delta_rel=d_rel, max_iters=3000, verify=False))
+        t0 = time.perf_counter()
+        blob = c.compress(x)
+        dt = time.perf_counter() - t0
+        # stats disabled (verify=False) -> recompute actives from the blobs
+        rows.append({
+            "bench": "table3", "delta_rel": d_rel,
+            "n_active_spat": blob.spat_edits.n_active,
+            "n_active_freq": blob.freq_edits.n_active,
+            "time_ms": dt * 1e3,
+        })
+    # iterations need verify=True (stats); sample the two regimes
+    for d_rel in ([1e-3] if quick else [1e-2, 1e-5]):
+        c = FFCz(base, FFCzConfig(E_rel=1e-3, Delta_rel=d_rel, max_iters=3000))
+        blob = c.compress(x)
+        rows.append({
+            "bench": "table3", "delta_rel": d_rel, "iterations": blob.stats.iterations,
+            "n_active_spat": blob.stats.n_active_spatial,
+            "n_active_freq": blob.stats.n_active_frequency,
+        })
+    save_results("table3_iters", rows)
+    return rows
+
+
+COLUMNS = ["bench", "delta_rel", "iterations", "n_active_spat", "n_active_freq", "time_ms"]

@@ -1,0 +1,57 @@
+"""Paper Table IV: per-kernel timing/AI breakdown of the editing pipeline.
+
+The paper reports A100 CUDA kernels vs a 64-core EPYC.  This container is a
+CPU running the Pallas kernels in interpret mode, so absolute numbers are
+NOT comparable; what we preserve is the structural breakdown (which stage
+dominates) and the arithmetic-intensity accounting.  FFT/IFFT timings use
+the XLA CPU FFT (the stage that dominates on GPU too, 68.7% in the paper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_results, timer
+from repro.core.cubes import project_fcube, project_scube
+from repro.data.fields import make_field
+
+
+def run(quick: bool = False):
+    rows = []
+    x = make_field("nyx-like").astype(np.float32)
+    n = x.size
+    eps = jnp.asarray((np.random.default_rng(0).standard_normal(x.shape) * 1e-3).astype(np.float32))
+
+    fft = jax.jit(jnp.fft.fftn)
+    ifft = jax.jit(lambda d: jnp.real(jnp.fft.ifftn(d)))
+    delta = fft(eps)
+    fproj = jax.jit(lambda d: project_fcube(d, 1.0)[0])
+    sproj = jax.jit(lambda e: project_scube(e, 1e-3)[0])
+
+    def bench(name, fn, arg, flops_per_el, bytes_per_el):
+        fn(arg).block_until_ready()
+        _, t = timer(lambda: fn(arg).block_until_ready(), repeat=2 if quick else 3)
+        rows.append({
+            "bench": "table4", "kernel": name, "time_ms": t * 1e3,
+            "GFLOPS": flops_per_el * n / t / 1e9,
+            "BW_GBps": bytes_per_el * n / t / 1e9,
+            "AI_flops_per_byte": flops_per_el / bytes_per_el,
+        })
+
+    logn = np.log2(n)
+    bench("forwardFFT", fft, eps, 5 * logn, 12.0)  # ~5NlogN flops, cplx out
+    bench("inverseFFT", ifft, delta, 5 * logn, 12.0)
+    bench("ProjectOntoFCube", fproj, delta, 4.0, 16.0)
+    bench("ProjectOntoSCube", sproj, eps, 2.0, 8.0)
+
+    fft_ms = rows[0]["time_ms"] + rows[1]["time_ms"]
+    total = sum(r["time_ms"] for r in rows)
+    rows.append({"bench": "table4", "kernel": "fft_share_of_total", "time_ms": total,
+                 "GFLOPS": 0.0, "BW_GBps": 0.0, "AI_flops_per_byte": fft_ms / total})
+    save_results("table4_kernels", rows)
+    return rows
+
+
+COLUMNS = ["bench", "kernel", "time_ms", "GFLOPS", "BW_GBps", "AI_flops_per_byte"]

@@ -1,0 +1,47 @@
+"""FFCz as training-infrastructure: compress a real model checkpoint with
+dual-domain bounds and measure size + restore fidelity.
+
+    PYTHONPATH=src:. python examples/compress_checkpoint.py
+"""
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint.codec import CheckpointCodec
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.models.model import build_model
+
+
+def main():
+    cfg = get_smoke_config("qwen2-7b")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    raw_bytes = sum(np.asarray(l).nbytes for l in jax.tree.leaves(params))
+
+    for enabled, label in ((False, "raw"), (True, "ffcz(E_rel=1e-4)")):
+        codec = CheckpointCodec(enabled=enabled, E_rel=1e-4, Delta_rel=1e-4)
+        with tempfile.TemporaryDirectory() as td:
+            mgr = CheckpointManager(td, codec=codec)
+            mgr.save(0, params)
+            stored = sum(
+                os.path.getsize(os.path.join(td, d, f))
+                for d in os.listdir(td)
+                for f in os.listdir(os.path.join(td, d))
+            )
+            got = mgr.restore(0, jax.eval_shape(lambda: params))
+            err = max(
+                float(np.abs(np.asarray(a) - np.asarray(b)).max())
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(got))
+            )
+        print(f"{label:20s}: {stored/1e6:7.2f} MB (raw {raw_bytes/1e6:.2f} MB, "
+              f"{raw_bytes/stored:.2f}x), max restore err {err:.2e}")
+    print("note: random-init weights are near-incompressible (max-entropy); on trained\n"
+          "checkpoints the prediction/transform stages find structure — the dual-domain\n"
+          "guarantee (pointwise + spectral) is the point, the ratio follows the data.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""repro — FFCz: spectrum-preserving lossy compression, as a production JAX framework.
+
+Layers:
+  core/         the paper's contribution: dual-domain (spatial+frequency)
+                error-bounded correction via alternating projection (POCS).
+  compressors/  JAX reimplementations of the algorithmic cores of the base
+                compressors the paper builds on (SZ3-like, ZFP-like, SPERR-like).
+  coding/       entropy coding (Huffman + zlib-as-ZSTD), bit packing, quantizers.
+  kernels/      Pallas TPU kernels for the hot paths (+ pure-jnp oracles).
+  models/       the 10 assigned LM architectures (dense/GQA, MoE, SSM, hybrid,
+                VLM-stub, audio-stub) as pure-JAX functional modules.
+  sharding/     DP/TP/EP/SP/PP partition rules over the production mesh.
+  optim/        AdamW + FFCz-compressed gradient all-reduce.
+  checkpoint/   atomic, resharding-capable checkpointing with FFCz codec.
+  runtime/      fault-tolerant trainer (restart, straggler mitigation, elastic).
+  serving/      batched decode engine with FFCz KV-cache compression.
+  launch/       production mesh, multi-pod dry-run, train/serve entry points.
+"""
+
+__version__ = "1.0.0"

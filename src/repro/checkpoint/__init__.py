@@ -1,0 +1,6 @@
+"""Checkpointing: atomic, resharding-capable, optionally FFCz-compressed."""
+
+from repro.checkpoint.codec import CheckpointCodec
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager", "CheckpointCodec"]

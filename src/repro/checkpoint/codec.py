@@ -1,0 +1,66 @@
+"""FFCz-compressed array codec for checkpoints (DESIGN.md §3 integration #1).
+
+Float arrays are compressed with a base compressor + FFCz dual-domain
+correction: the spatial bound controls pointwise weight error (restart
+quality), the frequency bound preserves each tensor's spectrum — for weight
+matrices that is the quantity tied to the layer's singular-value structure.
+Non-float / tiny arrays pass through raw.
+"""
+
+from __future__ import annotations
+
+import io
+import struct
+from typing import Tuple
+
+import numpy as np
+
+from repro.compressors import get_compressor
+from repro.core.ffcz import FFCz, FFCzBlob, FFCzConfig
+
+_RAW = b"R"
+_FFZ = b"F"
+
+
+class CheckpointCodec:
+    def __init__(
+        self,
+        enabled: bool = True,
+        E_rel: float = 1e-4,
+        Delta_rel: float = 1e-4,
+        base: str = "szlike",
+        min_size: int = 4096,
+        max_iters: int = 50,
+    ):
+        self.enabled = enabled
+        self.min_size = min_size
+        self.ffcz = FFCz(
+            get_compressor(base),
+            FFCzConfig(E_rel=E_rel, Delta_rel=Delta_rel, max_iters=max_iters, codec="zlib", verify=False),
+        )
+
+    def encode(self, arr: np.ndarray) -> bytes:
+        arr = np.asarray(arr)
+        use_ffcz = (
+            self.enabled
+            and arr.dtype in (np.float32, np.float64)
+            and arr.size >= self.min_size
+            and np.ptp(arr) > 0
+        )
+        if not use_ffcz:
+            buf = io.BytesIO()
+            np.save(buf, arr, allow_pickle=False)
+            return _RAW + buf.getvalue()
+        blob = self.ffcz.compress(arr.astype(np.float32))
+        payload = blob.to_bytes()
+        header = struct.pack("<B", {"float32": 0, "float64": 1}[str(arr.dtype)])
+        return _FFZ + header + payload
+
+    def decode(self, data: bytes) -> np.ndarray:
+        tag, body = data[:1], data[1:]
+        if tag == _RAW:
+            return np.load(io.BytesIO(body), allow_pickle=False)
+        (dt_code,) = struct.unpack_from("<B", body, 0)
+        blob = FFCzBlob.from_bytes(body[1:])
+        out = self.ffcz.decompress(blob)
+        return out.astype(np.float64 if dt_code == 1 else np.float32)

@@ -1,0 +1,17 @@
+"""Entropy coding and bit packing for FFCz edit streams and base compressors."""
+
+from repro.coding.bitpack import pack_bits, unpack_bits
+from repro.coding.huffman import huffman_decode, huffman_encode
+from repro.coding.lossless import lossless_compress, lossless_decompress
+from repro.coding.quantize import dequantize_uniform, quantize_uniform
+
+__all__ = [
+    "pack_bits",
+    "unpack_bits",
+    "huffman_encode",
+    "huffman_decode",
+    "lossless_compress",
+    "lossless_decompress",
+    "quantize_uniform",
+    "dequantize_uniform",
+]

@@ -1,0 +1,153 @@
+"""Canonical Huffman coding for quantized edit streams (paper §IV-B, [37]).
+
+Encoder is fully vectorized (bit scatter over numpy); decoder uses a
+lookup-table walk.  The paper chains Huffman with ZSTD; see
+:mod:`repro.coding.lossless` for the chained entry points.
+
+Wire format (little-endian):
+  u32  n_symbols_in_alphabet
+  i64  per-alphabet-symbol raw value   (n_symbols entries, int64)
+  u8   per-alphabet-symbol code length (n_symbols entries)
+  u64  n_encoded_symbols
+  u64  n_bits
+  u8[] bitstream (MSB first within each byte)
+"""
+
+from __future__ import annotations
+
+import heapq
+import struct
+
+import numpy as np
+
+
+def _code_lengths(freqs: np.ndarray) -> np.ndarray:
+    """Huffman code lengths from symbol frequencies (heap merge)."""
+    n = len(freqs)
+    if n == 1:
+        return np.array([1], dtype=np.uint8)
+    # heap entries: (freq, tiebreak, set-of-symbol-indices)
+    heap = [(int(f), i, [i]) for i, f in enumerate(freqs)]
+    heapq.heapify(heap)
+    lengths = np.zeros(n, dtype=np.int64)
+    tiebreak = n
+    while len(heap) > 1:
+        fa, _, sa = heapq.heappop(heap)
+        fb, _, sb = heapq.heappop(heap)
+        for s in sa:
+            lengths[s] += 1
+        for s in sb:
+            lengths[s] += 1
+        heapq.heappush(heap, (fa + fb, tiebreak, sa + sb))
+        tiebreak += 1
+    return lengths.astype(np.uint8)
+
+
+def _canonical_codes(lengths: np.ndarray) -> np.ndarray:
+    """Canonical Huffman code values (uint64) given code lengths.
+
+    Symbols are ranked by (length, symbol-index); codes assigned in canonical
+    order so the decoder only needs the lengths.
+    """
+    order = np.lexsort((np.arange(len(lengths)), lengths))
+    codes = np.zeros(len(lengths), dtype=np.uint64)
+    code = 0
+    prev_len = int(lengths[order[0]])
+    for rank, sym in enumerate(order):
+        ln = int(lengths[sym])
+        if rank > 0:
+            code = (code + 1) << (ln - prev_len)
+        codes[sym] = code
+        prev_len = ln
+    return codes
+
+
+def huffman_encode(symbols: np.ndarray) -> bytes:
+    """Encode an integer symbol stream; returns self-describing bytes."""
+    symbols = np.asarray(symbols).astype(np.int64).ravel()
+    if symbols.size == 0:
+        return struct.pack("<I", 0) + struct.pack("<QQ", 0, 0)
+    alphabet, inverse, counts = np.unique(symbols, return_inverse=True, return_counts=True)
+    lengths = _code_lengths(counts)
+    codes = _canonical_codes(lengths)
+
+    sym_lengths = lengths[inverse].astype(np.int64)
+    sym_codes = codes[inverse]
+    offsets = np.concatenate(([0], np.cumsum(sym_lengths)))
+    total_bits = int(offsets[-1])
+
+    bits = np.zeros(total_bits, dtype=np.uint8)
+    max_len = int(lengths.max())
+    # Vectorized scatter: for bit j of each code (MSB first), write where len > j.
+    for j in range(max_len):
+        mask = sym_lengths > j
+        if not mask.any():
+            break
+        shift = (sym_lengths[mask] - 1 - j).astype(np.uint64)
+        bitvals = ((sym_codes[mask] >> shift) & np.uint64(1)).astype(np.uint8)
+        bits[offsets[:-1][mask] + j] = bitvals
+
+    payload = np.packbits(bits).tobytes()
+    header = struct.pack("<I", len(alphabet))
+    header += alphabet.astype("<i8").tobytes()
+    header += lengths.astype(np.uint8).tobytes()
+    header += struct.pack("<QQ", symbols.size, total_bits)
+    return header + payload
+
+
+def huffman_decode(data: bytes) -> np.ndarray:
+    """Inverse of :func:`huffman_encode`; returns int64 symbols."""
+    (n_alpha,) = struct.unpack_from("<I", data, 0)
+    off = 4
+    if n_alpha == 0:
+        return np.zeros(0, dtype=np.int64)
+    alphabet = np.frombuffer(data, dtype="<i8", count=n_alpha, offset=off).copy()
+    off += 8 * n_alpha
+    lengths = np.frombuffer(data, dtype=np.uint8, count=n_alpha, offset=off).copy()
+    off += n_alpha
+    n_syms, n_bits = struct.unpack_from("<QQ", data, off)
+    off += 16
+    bits = np.unpackbits(np.frombuffer(data, dtype=np.uint8, offset=off), count=n_bits)
+
+    codes = _canonical_codes(lengths)
+    max_len = int(lengths.max())
+    if max_len <= 20:
+        # Full lookup table: next `max_len` bits -> (symbol index, code length).
+        table_sym = np.zeros(1 << max_len, dtype=np.int64)
+        table_len = np.zeros(1 << max_len, dtype=np.int64)
+        for sym in range(n_alpha):
+            ln = int(lengths[sym])
+            base = int(codes[sym]) << (max_len - ln)
+            span = 1 << (max_len - ln)
+            table_sym[base : base + span] = sym
+            table_len[base : base + span] = ln
+        # Pad the bitstream so the final window read never overruns.
+        padded = np.concatenate([bits, np.zeros(max_len, dtype=np.uint8)])
+        weights = (1 << np.arange(max_len - 1, -1, -1)).astype(np.int64)
+        out = np.empty(n_syms, dtype=np.int64)
+        pos = 0
+        for i in range(n_syms):
+            window = int(padded[pos : pos + max_len] @ weights)
+            sym = table_sym[window]
+            out[i] = sym
+            pos += int(table_len[window])
+        return alphabet[out]
+    # Fallback: per-bit canonical walk (rare: pathological length > 20).
+    # first_code/first_rank per length, symbols in canonical order.
+    order = np.lexsort((np.arange(n_alpha), lengths))
+    out = np.empty(n_syms, dtype=np.int64)
+    pos = 0
+    code_of = {int(codes[s]): None for s in range(n_alpha)}  # noqa: F841 (doc)
+    lut = {(int(lengths[s]), int(codes[s])): s for s in range(n_alpha)}
+    for i in range(n_syms):
+        code = 0
+        ln = 0
+        while True:
+            code = (code << 1) | int(bits[pos])
+            pos += 1
+            ln += 1
+            sym = lut.get((ln, code))
+            if sym is not None:
+                out[i] = sym
+                break
+    return alphabet[out]

@@ -1,0 +1,169 @@
+"""Architecture registry: one module per assigned architecture (+ paper's own
+field configs in ffcz_fields.py).  ``get_config(name)`` returns the full
+published config; ``get_smoke_config(name)`` returns the reduced same-family
+config used by CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+ARCH_IDS = (
+    "qwen2-0.5b",
+    "qwen2-7b",
+    "granite-3-2b",
+    "minitron-4b",
+    "granite-moe-3b-a800m",
+    "llama4-maverick-400b-a17b",
+    "mamba2-2.7b",
+    "zamba2-7b",
+    "llava-next-mistral-7b",
+    "whisper-tiny",
+)
+
+SHAPE_IDS = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+#: (seq_len, global_batch, kind) per shape cell
+SHAPES = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """FFCz integration knobs (first-class feature, DESIGN.md §3)."""
+
+    grad_compression: bool = False
+    grad_E_rel: float = 1e-2
+    grad_Delta_rel: float = 1e-2
+    grad_block: int = 4096
+    grad_bits: int = 8
+    checkpoint_compression: bool = False
+    ckpt_E_rel: float = 1e-4
+    ckpt_Delta_rel: float = 1e-4
+    kv_cache_compression: bool = False
+    kv_E_rel: float = 1e-2
+    kv_Delta_rel: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    qkv_bias: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1  # apply MoE every k-th layer (others dense)
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+    # --- SSM (Mamba2/SSD) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_ngroups: int = 1
+    ssm_chunk: int = 256
+    conv_kernel: int = 4
+    # --- hybrid (Zamba2-style shared attention) ---
+    attn_every: int = 0  # >0: weight-shared attention block every k core layers
+    # --- encoder-decoder (Whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # stub frontend sequence length (audio frames)
+    # --- VLM stub ---
+    vision_tokens: int = 0
+    vision_dim: int = 0
+    # --- common ---
+    pos_type: str = "rope"  # rope | sinusoidal | none
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- runtime ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    attention_impl: str = "xla_flash"  # xla_flash | pallas | naive
+    remat: str = "dots"  # none | dots | full
+    causal_scheduling: bool = True  # skip fully-masked causal kv blocks (perf)
+    # Mesh axes ((name, size), ...) injected by launch.steps at step-build
+    # time so model code can place adaptive sharding constraints
+    # (attention-internal activation sharding — §Perf iteration 1).
+    mesh_axes: tuple = ()
+    # §Perf toggle: explicit attention activation sharding constraints
+    shard_attn_activations: bool = True
+    compression: CompressionConfig = dataclasses.field(default_factory=CompressionConfig)
+
+    def axis_size(self, name: str) -> int:
+        return dict(self.mesh_axes).get(name, 1)
+
+    def dp_axes(self):
+        return tuple(a for a, _ in self.mesh_axes if a in ("pod", "data"))
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to a multiple of 128 (Megatron-style) so the
+        embedding/LM-head stays TP-shardable for odd vocabularies
+        (49155, 50280, 51865, 202048...).  Logits for padded ids are masked."""
+        return ((self.vocab + 127) // 128) * 128
+
+    @property
+    def n_experts_padded(self) -> int:
+        """Experts padded to a multiple of 16 so the expert axis EP-shards on
+        the production TP degree (dead experts are never routed — the router
+        stays at n_experts).  §Perf: even EP keeps the expert GEMMs local."""
+        return ((self.n_experts + 15) // 16) * 16 if self.n_experts else 0
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode state => long_500k is runnable."""
+        return self.family in ("ssm", "hybrid")
+
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs have a causal decoder (whisper is enc-dec)
+
+    def cells(self) -> Tuple[str, ...]:
+        """Runnable shape cells for this arch (skips noted in DESIGN.md)."""
+        out = ["train_4k", "prefill_32k", "decode_32k"]
+        if self.supports_long_context():
+            out.append("long_500k")
+        return tuple(out)
+
+
+_MODULES = {arch: arch.replace("-", "_").replace(".", "_") for arch in ARCH_IDS}
+
+
+def get_config(name: str, **overrides) -> ArchConfig:
+    if name not in _MODULES:
+        raise ValueError(f"unknown arch {name!r}; have {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg = mod.CONFIG
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_smoke_config(name: str, **overrides) -> ArchConfig:
+    if name not in _MODULES:
+        raise ValueError(f"unknown arch {name!r}; have {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg = mod.SMOKE
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg

@@ -1,0 +1,22 @@
+"""FFCz core: dual-domain error bounding via alternating projection (paper §IV)."""
+
+from repro.core.bounds import DualBounds, power_spectrum_delta
+from repro.core.cubes import project_fcube, project_scube
+from repro.core.ffcz import FFCz, FFCzConfig
+from repro.core.pocs import AlternatingProjectionResult, alternating_projection
+from repro.core.spectrum import power_spectrum, psnr, relative_frequency_error, ssnr
+
+__all__ = [
+    "DualBounds",
+    "power_spectrum_delta",
+    "project_fcube",
+    "project_scube",
+    "alternating_projection",
+    "AlternatingProjectionResult",
+    "FFCz",
+    "FFCzConfig",
+    "power_spectrum",
+    "ssnr",
+    "psnr",
+    "relative_frequency_error",
+]

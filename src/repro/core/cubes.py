@@ -1,0 +1,51 @@
+"""s-cube / f-cube projections (paper §IV-A/B, Fig. 3).
+
+The spatial error vector ``eps`` lives in R^N.  The s-cube is the axis-aligned
+box ``|eps_n| <= E``; projecting onto it clips each coordinate.  The f-cube is
+axis-aligned in the *frequency basis*: its half-space normals are the DFT
+cosine/sine rows, which are mutually orthogonal, so the exact Euclidean
+projection onto the f-cube is
+
+    FFT -> clip Re/Im to [-Delta, Delta] -> IFFT.
+
+Clipping Re and Im with the same (Hermitian-symmetric) bound preserves the
+Hermitian symmetry ``delta_{N-k} = conj(delta_k)`` of the spectrum of a real
+error vector (clip is odd for Im, even for Re), so IFFT(clipped) stays real —
+this is why the paper can clip components independently on the GPU.
+
+These are the pure-jnp oracles; :mod:`repro.kernels.fcube` / ``scube`` are the
+fused Pallas TPU kernels with identical semantics.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def project_scube(eps: jnp.ndarray, E) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Clip spatial errors to the s-cube.  Returns (clipped, displacement)."""
+    clipped = jnp.clip(eps, -E, E)
+    return clipped, clipped - eps
+
+
+def project_fcube(delta: jnp.ndarray, Delta) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Clip complex frequency errors to the f-cube (independent Re/Im clip).
+
+    Returns (clipped, displacement) — both complex, same shape as ``delta``.
+    """
+    re = jnp.clip(delta.real, -Delta, Delta)
+    im = jnp.clip(delta.imag, -Delta, Delta)
+    clipped = (re + 1j * im).astype(delta.dtype)
+    return clipped, clipped - delta
+
+
+def fcube_violations(delta: jnp.ndarray, Delta) -> jnp.ndarray:
+    """Count of frequency components outside the f-cube (CheckConvergence)."""
+    return jnp.sum((jnp.abs(delta.real) > Delta) | (jnp.abs(delta.imag) > Delta))
+
+
+def scube_violations(eps: jnp.ndarray, E) -> jnp.ndarray:
+    """Count of spatial components outside the s-cube."""
+    return jnp.sum(jnp.abs(eps) > E)

@@ -1,0 +1,160 @@
+"""Alternating projection-correction (paper Alg. 1) as one jitted while_loop.
+
+The paper's CUDA pipeline launches per-iteration kernels from the host
+(cuFFT -> CheckConvergence -> ProjectOntoFCube -> cuFFT -> ProjectOntoSCube)
+with device<->host synchronization on the convergence flag.  On TPU/JAX the
+whole loop is a single ``jax.lax.while_loop`` resident in HBM: no launch
+overhead, no host sync, and XLA fuses the clip/accumulate stages around the
+FFTs.  The convergence check is *fused into* the f-cube projection (one pass
+over delta instead of the paper's two kernels) — a beyond-paper optimization
+mirrored in the Pallas kernel (:mod:`repro.kernels.fcube`).
+
+Semantics match Alg. 1 exactly:
+
+  eps <- x_hat - x                       (inside the s-cube by construction)
+  loop:
+    delta <- FFT(eps)
+    if delta inside f-cube: stop          (CheckConvergence)
+    delta' <- clip(delta, +-Delta)        (ProjectOntoFCube)
+    freq_edits += delta' - delta
+    eps <- IFFT(delta')
+    eps' <- clip(eps, +-E)                (ProjectOntoSCube)
+    spat_edits += eps' - eps
+    eps <- eps'
+
+Both cubes are closed convex sets with (generically) non-empty intersection,
+so POCS converges; ``max_iters`` guards the tangential-intersection slow case
+(paper §III), after which a final s-cube projection guarantees the spatial
+bound and the residual frequency excess is reported.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cubes import fcube_violations, project_fcube, project_scube
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AlternatingProjectionResult:
+    eps: Any  # final spatial error vector (inside s-cube; inside f-cube if converged)
+    spat_edits: Any  # accumulated displacement along the spatial basis (real)
+    freq_edits: Any  # accumulated displacement along the frequency basis (complex)
+    iterations: Any  # int32 iteration count
+    converged: Any  # bool: inside both cubes
+    final_violations: Any  # int32: f-cube violations at exit (0 if converged)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "use_kernels", "relax"))
+def alternating_projection(
+    eps0: jnp.ndarray,
+    E,
+    Delta,
+    max_iters: int = 1000,
+    use_kernels: bool = False,
+    relax: float = 1.0,
+    check_slack=0.0,
+) -> AlternatingProjectionResult:
+    """Run Alg. 1 from an initial spatial error vector ``eps0``.
+
+    Args:
+      eps0: x_hat - x from the base compressor (any rank, real dtype).
+      E, Delta: scalar or broadcastable pointwise bounds (see core.bounds).
+      max_iters: POCS iteration cap.
+      use_kernels: route projections through the Pallas TPU kernels
+        (``repro.kernels``) instead of the pure-jnp oracles.
+      relax: over-relaxation factor (beyond-paper, addresses the paper's
+        noted slow nearly-tangential convergence): the f-cube step moves
+        ``relax`` times the projection displacement, then re-projects, i.e.
+        relaxed POCS x <- P(x + (relax-1)(P(x) - x)).  1.0 is the
+        paper-faithful plain alternating projection; 1.0 < relax < 2.0
+        preserves Fejer monotonicity (convergence) for convex sets.  The
+        final iterate is still an exact f-cube projection, so feasibility
+        guarantees are unchanged.
+
+    Returns an :class:`AlternatingProjectionResult` pytree.
+    """
+    if use_kernels:
+        from repro.kernels.fcube import ops as fcube_ops
+        from repro.kernels.scube import ops as scube_ops
+
+        f_project = functools.partial(fcube_ops.project_fcube_fused, check_tol=1e-5)
+        s_project = scube_ops.project_scube_fused
+    else:
+        # Convergence test uses a float32-resolution tolerance: below
+        # ~1e-5 relative the float32 FFT round-trip oscillates and cannot
+        # make progress; the exact float64 polish in FFCz.compress owns the
+        # last digits (its workload is O(tolerance), i.e. negligible).
+        _CHECK_TOL = 1e-5
+
+        def f_project(delta, Delta):
+            # check_slack: absolute float32-noise allowance for tiny
+            # pointwise Delta_k (the caller reserves >= 2x this in its
+            # bound shrink, and the float64 polish closes the gap exactly)
+            viol = fcube_violations(delta, Delta * (1.0 + _CHECK_TOL) + check_slack)
+            clipped, disp = project_fcube(delta, Delta)
+            return clipped, disp, viol
+
+        def s_project(eps, E):
+            clipped, disp = project_scube(eps, E)
+            return clipped, disp
+
+    eps0 = jnp.asarray(eps0)
+    cdtype = jnp.complex64 if eps0.dtype != jnp.float64 else jnp.complex128
+    E = jnp.asarray(E, dtype=eps0.dtype)
+    Delta_r = jnp.asarray(Delta, dtype=eps0.real.dtype)
+
+    def cond(state):
+        _eps, _se, _fe, it, done, _viol = state
+        return jnp.logical_and(~done, it < max_iters)
+
+    def body(state):
+        eps, spat_edits, freq_edits, it, _done, _viol = state
+        delta = jnp.fft.fftn(eps).astype(cdtype)
+        clipped, f_disp, viol = f_project(delta, Delta_r)
+        if relax != 1.0:
+            # over-relax then re-project: still inside the f-cube, but
+            # violating components land in the interior, not on the face
+            over = delta + relax * f_disp
+            clipped, _, _ = f_project(over, Delta_r)
+            f_disp = clipped - delta
+        done = viol == 0
+        # When already inside the f-cube, the displacement is zero and the
+        # projections below are no-ops; masking keeps the loop branch-free
+        # (matches the GPU implementation, which exits before projecting).
+        freq_edits = freq_edits + jnp.where(done, 0, 1) * f_disp
+        eps_f = jnp.real(jnp.fft.ifftn(clipped)).astype(eps.dtype)
+        eps_s, s_disp = s_project(eps_f, E)
+        if relax != 1.0:
+            over_s = eps_f + relax * s_disp
+            eps_s, _ = s_project(over_s, E)
+            s_disp = eps_s - eps_f
+        spat_edits = spat_edits + jnp.where(done, 0, 1) * s_disp
+        eps_next = jnp.where(done, eps, eps_s)
+        return (eps_next, spat_edits, freq_edits, it + 1, done, viol)
+
+    state0 = (
+        eps0,
+        jnp.zeros_like(eps0),
+        jnp.zeros(eps0.shape, dtype=cdtype),
+        jnp.int32(0),
+        jnp.bool_(False),
+        jnp.int32(-1),
+    )
+    eps, spat_edits, freq_edits, it, done, viol = jax.lax.while_loop(cond, body, state0)
+    # Iteration accounting matches Table III: the terminating convergence
+    # check counts as an iteration (pure-containment cases report 1).
+    return AlternatingProjectionResult(
+        eps=eps,
+        spat_edits=spat_edits,
+        freq_edits=freq_edits,
+        iterations=it,
+        converged=done,
+        final_violations=jnp.where(done, 0, viol),
+    )

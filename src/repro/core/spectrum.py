@@ -1,0 +1,79 @@
+"""Frequency-domain metrics: power spectrum, SSNR, RFE, PSNR (paper §III, §V-A).
+
+All functions are jittable jnp; hosts can call them on numpy arrays directly.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def power_spectrum(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Radially binned power spectrum P(k) of an n-D real field (paper §III).
+
+    Normalizes fluctuations (x - mean)/mean, FFTs, shifts the zero frequency
+    to the center, and accumulates |X'|^2 over integer radial shells
+    ``u^2 + v^2 + w^2 = k^2``.
+
+    Returns (k values, P(k)) with ``k in [0, floor(min(N)/2)]``.
+    """
+    x = jnp.asarray(x)
+    mean = jnp.mean(x)
+    xp = (x - mean) / jnp.where(mean == 0, 1.0, mean)
+    X = jnp.fft.fftshift(jnp.fft.fftn(xp))
+    power = jnp.abs(X) ** 2
+
+    grids = jnp.meshgrid(
+        *[jnp.arange(n) - n // 2 for n in x.shape],
+        indexing="ij",
+    )
+    r = jnp.sqrt(sum(g.astype(jnp.float32) ** 2 for g in grids))
+    k_max = min(x.shape) // 2
+    shell = jnp.rint(r).astype(jnp.int32)
+    pk = jnp.zeros(k_max + 1, dtype=power.dtype).at[jnp.clip(shell, 0, k_max)].add(
+        jnp.where(shell <= k_max, power, 0.0)
+    )
+    return jnp.arange(k_max + 1), pk
+
+
+def ssnr(X_hat: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    """Spectral signal-to-noise ratio in dB (paper §V-A)."""
+    num = jnp.sum(jnp.abs(X) ** 2)
+    den = jnp.sum(jnp.abs(X - X_hat) ** 2)
+    return 10.0 * jnp.log10(num / jnp.maximum(den, jnp.finfo(jnp.float32).tiny))
+
+
+def ssnr_spatial(x_hat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """SSNR computed from spatial fields (FFTs applied internally)."""
+    return ssnr(jnp.fft.fftn(x_hat), jnp.fft.fftn(x))
+
+
+def psnr(x_hat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Peak signal-to-noise ratio in dB (spatial-domain metric)."""
+    rng = jnp.max(x) - jnp.min(x)
+    mse = jnp.mean((x_hat - x) ** 2)
+    return 20.0 * jnp.log10(rng) - 10.0 * jnp.log10(jnp.maximum(mse, jnp.finfo(jnp.float32).tiny))
+
+
+def relative_frequency_error(X_hat: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    """RFE per component: |delta_k| / max_k |X_k| (paper §V-A)."""
+    return jnp.abs(X_hat - X) / jnp.max(jnp.abs(X))
+
+
+def power_spectrum_relative_error(x_hat, x) -> Tuple[np.ndarray, np.ndarray]:
+    """(P_hat(k) - P(k)) / P(k) per shell (paper Fig. 10 lower row)."""
+    k, p = power_spectrum(x)
+    _, p_hat = power_spectrum(x_hat)
+    p = np.asarray(p)
+    p_hat = np.asarray(p_hat)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rel = np.where(p > 0, (p_hat - p) / p, 0.0)
+    return np.asarray(k), rel
+
+
+def bitrate(compressed_bytes: int, n_values: int) -> float:
+    """Bits per value (the paper's bitrate axis)."""
+    return 8.0 * compressed_bytes / n_values

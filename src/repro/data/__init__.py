@@ -1,0 +1,6 @@
+"""Data layer: deterministic sharded token pipeline + synthetic science fields."""
+
+from repro.data.fields import make_field
+from repro.data.pipeline import TokenPipeline
+
+__all__ = ["TokenPipeline", "make_field"]

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for FFCz hot spots + the transformer attention hot path.
+
+Each kernel subpackage follows the repo convention:
+
+  <name>/kernel.py  pl.pallas_call with explicit BlockSpec VMEM tiling
+  <name>/ops.py     jit'd public wrapper (padding, tiling, dtype handling)
+  <name>/ref.py     pure-jnp oracle used by the allclose test sweeps
+
+Kernels (paper §IV-D Table IV → TPU adaptation, DESIGN.md §2):
+
+  fcube            fused CheckConvergence + ProjectOntoFCube (one VMEM pass)
+  scube            fused s-cube projection + violation count
+  quantize         QuantizeEdits (uniform grid, int codes + flags)
+  block_transform  4^d decorrelating transform of the zfplike base compressor
+  flash_attention  causal GQA flash attention (framework serving/training hot
+                   path; FFCz itself is FFT-dominated and XLA owns the FFT)
+
+All kernels are TPU-targeted (MXU/VPU-aligned block shapes) and validated on
+CPU with ``interpret=True``.
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.block_transform import ops, ref
+from repro.kernels.block_transform.ops import block_transform_quantize
+
+__all__ = ["ops", "ref", "block_transform_quantize"]

@@ -1,0 +1,52 @@
+"""Blockwise decorrelating transform + quantize Pallas TPU kernel.
+
+The zfplike base compressor's hot loop: every 4^d (or 8^d) block is hit with a
+separable orthonormal transform and its coefficients quantized.  On TPU we
+flatten each block to a row and Kronecker-expand the separable transform into
+one (B, B) matrix, turning the whole stage into a single MXU GEMM fused with
+the quantizer: (block_rows, B) x (B, B) per grid step — MXU-aligned since
+B = 64 (4^3) or 128 (4^2 pairs) after the ops.py padding, and block_rows is a
+multiple of 8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 512
+
+
+def _bt_kernel(x_ref, mat_ref, codes_ref, *, q: float):
+    x = x_ref[...]
+    mat = mat_ref[...]
+    coeffs = jnp.dot(x, mat.T, preferred_element_type=jnp.float32)
+    codes_ref[...] = jnp.rint(coeffs / q).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "interpret", "block_rows"))
+def block_transform_pallas(
+    blocks: jnp.ndarray,
+    matrix: jnp.ndarray,
+    *,
+    q: float,
+    interpret: bool = False,
+    block_rows: int = BLOCK_ROWS,
+):
+    nb, B = blocks.shape
+    assert nb % block_rows == 0 and matrix.shape == (B, B)
+    grid = (nb // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_bt_kernel, q=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, B), lambda i: (i, 0)),
+            pl.BlockSpec((B, B), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, B), jnp.int32),
+        interpret=interpret,
+    )(blocks, matrix)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the blockwise decorrelating transform + quantize."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_transform_quantize_ref(blocks: jnp.ndarray, matrix: jnp.ndarray, q: float):
+    """blocks: (nb, B) flattened blocks; matrix: (B, B) separable transform
+    (already Kronecker-expanded); q: quantization step.
+
+    Returns int32 coefficient codes (nb, B).
+    """
+    coeffs = blocks @ matrix.T
+    return jnp.rint(coeffs / q).astype(jnp.int32)

@@ -1,0 +1,4 @@
+from repro.kernels.fcube import ops, ref
+from repro.kernels.fcube.ops import project_fcube_fused
+
+__all__ = ["ops", "ref", "project_fcube_fused"]

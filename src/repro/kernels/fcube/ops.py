@@ -1,0 +1,72 @@
+"""jit'd wrapper for the fused f-cube projection kernel.
+
+Handles flattening an arbitrary-rank complex frequency-error tensor into the
+(rows, 128) float planes the kernel tiles, padding (with in-bound zeros so
+padded lanes never count as violations), and reassembly.  On CPU the kernel
+runs in interpret mode; on TPU it compiles via Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fcube.kernel import BLOCK_ROWS, LANES, fcube_pallas
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _tile(x: jnp.ndarray, block_rows: int):
+    """Flatten to (rows, 128) with rows % block_rows == 0; returns (tiled, pad)."""
+    flat = x.reshape(-1)
+    chunk = block_rows * LANES
+    pad = (-flat.size) % chunk
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), pad
+
+
+def _untile(t: jnp.ndarray, shape, pad: int):
+    flat = t.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret", "check_tol"))
+def project_fcube_fused(
+    delta: jnp.ndarray,
+    Delta,
+    block_rows: int = BLOCK_ROWS,
+    interpret: bool | None = None,
+    check_tol: float = 0.0,
+):
+    """Drop-in replacement for core.cubes.project_fcube + fcube_violations.
+
+    Returns (clipped complex, displacement complex, violation count int32).
+    """
+    if interpret is None:
+        interpret = _is_cpu()
+    shape = delta.shape
+    re, pad = _tile(delta.real.astype(jnp.float32), block_rows)
+    im, _ = _tile(delta.imag.astype(jnp.float32), block_rows)
+    Delta_arr = jnp.asarray(Delta, dtype=jnp.float32)
+    pointwise = Delta_arr.ndim > 0
+    if pointwise:
+        # pad pointwise bounds with +inf so padded zero lanes are never violations
+        dt, _ = _tile(jnp.broadcast_to(Delta_arr, shape), block_rows)
+        if pad:
+            flat = dt.reshape(-1).at[-pad:].set(jnp.inf) if pad else dt.reshape(-1)
+            dt = flat.reshape(-1, LANES)
+    else:
+        dt = Delta_arr.reshape(1, 1)
+    cr, ci, er, ei, viol = fcube_pallas(
+        re, im, dt, pointwise=pointwise, interpret=interpret, block_rows=block_rows,
+        check_tol=check_tol,
+    )
+    clipped = (_untile(cr, shape, pad) + 1j * _untile(ci, shape, pad)).astype(delta.dtype)
+    edits = (_untile(er, shape, pad) + 1j * _untile(ei, shape, pad)).astype(delta.dtype)
+    return clipped, edits, jnp.sum(viol)

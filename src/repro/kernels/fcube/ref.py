@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused f-cube projection (paper Alg. 1 lines 6-10)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def project_fcube_fused_ref(delta: jnp.ndarray, Delta):
+    """Clip complex frequency errors to +-Delta (Re/Im independently), return
+    (clipped, displacement, violation_count).
+
+    ``Delta`` is a scalar or an array broadcastable to ``delta.shape``.
+    """
+    viol = jnp.sum((jnp.abs(delta.real) > Delta) | (jnp.abs(delta.imag) > Delta))
+    re = jnp.clip(delta.real, -Delta, Delta)
+    im = jnp.clip(delta.imag, -Delta, Delta)
+    clipped = (re + 1j * im).astype(delta.dtype)
+    return clipped, clipped - delta, viol.astype(jnp.int32)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for causal GQA attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (b, hq, sq, d)
+    k: jnp.ndarray,  # (b, hkv, sk, d)
+    v: jnp.ndarray,  # (b, hkv, sk, d)
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kq.astype(jnp.float32)) * scale
+    if causal:
+        sk = k.shape[2]
+        # decode-style: query block is the *suffix* of the kv sequence
+        offset = sk - sq
+        row = jnp.arange(sq)[:, None] + offset
+        col = jnp.arange(sk)[None, :]
+        s = jnp.where(col <= row, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.quantize import ops, ref
+from repro.kernels.quantize.ops import quantize_edits
+
+__all__ = ["ops", "ref", "quantize_edits"]

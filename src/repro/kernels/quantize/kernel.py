@@ -1,0 +1,54 @@
+"""QuantizeEdits Pallas TPU kernel (paper §IV-D, one thread per edit -> one
+(rows, 128) VPU tile per grid step).  Emits int32 codes and nonzero flags in
+the same pass — the flags feed the prefix-sum compaction, so fusing them here
+saves the extra read the A100 pipeline does in CompactEdits.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _quantize_kernel(v_ref, b_ref, codes_ref, flags_ref, *, m: int):
+    v = v_ref[...]
+    b = b_ref[...]
+    step = 2.0 * b / (2.0**m)
+    safe = jnp.where(step == 0.0, 1.0, step)
+    codes = jnp.where(step == 0.0, 0.0, jnp.rint(v / safe)).astype(jnp.int32)
+    codes_ref[...] = codes
+    flags_ref[...] = (codes != 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "pointwise", "interpret", "block_rows"))
+def quantize_pallas(
+    values: jnp.ndarray,
+    bound: jnp.ndarray,
+    *,
+    m: int,
+    pointwise: bool,
+    interpret: bool = False,
+    block_rows: int = BLOCK_ROWS,
+):
+    rows = values.shape[0]
+    assert values.shape[1] == LANES and rows % block_rows == 0
+    grid = (rows // block_rows,)
+    data_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    b_spec = data_spec if pointwise else pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, m=m),
+        grid=grid,
+        in_specs=[data_spec, b_spec],
+        out_specs=[data_spec, data_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(values.shape, jnp.int32),
+            jax.ShapeDtypeStruct(values.shape, jnp.int32),
+        ],
+        interpret=interpret,
+    )(values, bound)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for QuantizeEdits (paper Alg. 1 line 17-18)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_edits_ref(values: jnp.ndarray, bound, m: int):
+    """Uniform round-to-nearest quantization on the 2^m cube grid.
+
+    Returns (codes int32, flags int32 of nonzero codes).
+    """
+    step = 2.0 * jnp.asarray(bound, dtype=jnp.float32) / (2.0**m)
+    safe = jnp.where(step == 0.0, 1.0, step)
+    codes = jnp.where(step == 0.0, 0.0, jnp.rint(values / safe)).astype(jnp.int32)
+    return codes, (codes != 0).astype(jnp.int32)

@@ -1,0 +1,4 @@
+from repro.kernels.scube import ops, ref
+from repro.kernels.scube.ops import project_scube_fused
+
+__all__ = ["ops", "ref", "project_scube_fused"]

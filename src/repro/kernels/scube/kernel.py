@@ -1,0 +1,48 @@
+"""Fused s-cube projection Pallas TPU kernel (paper §IV-D ProjectOntoSCube).
+
+One (rows, 128) VMEM pass: clip to +-E and emit the edit displacement.
+E is scalar ((1,1) block) or pointwise (tiled like the data).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _scube_kernel(x_ref, e_ref, out_ref, edit_ref):
+    x = x_ref[...]
+    e = e_ref[...]
+    c = jnp.clip(x, -e, e)
+    out_ref[...] = c
+    edit_ref[...] = c - x
+
+
+@functools.partial(jax.jit, static_argnames=("pointwise", "interpret", "block_rows"))
+def scube_pallas(
+    eps: jnp.ndarray,
+    E: jnp.ndarray,
+    *,
+    pointwise: bool,
+    interpret: bool = False,
+    block_rows: int = BLOCK_ROWS,
+):
+    rows = eps.shape[0]
+    assert eps.shape[1] == LANES and rows % block_rows == 0
+    grid = (rows // block_rows,)
+    data_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    e_spec = data_spec if pointwise else pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        _scube_kernel,
+        grid=grid,
+        in_specs=[data_spec, e_spec],
+        out_specs=[data_spec, data_spec],
+        out_shape=[jax.ShapeDtypeStruct(eps.shape, eps.dtype)] * 2,
+        interpret=interpret,
+    )(eps, E)

@@ -1,0 +1,48 @@
+"""jit'd wrapper for the fused s-cube projection kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.scube.kernel import BLOCK_ROWS, LANES, scube_pallas
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def project_scube_fused(
+    eps: jnp.ndarray,
+    E,
+    block_rows: int = BLOCK_ROWS,
+    interpret: bool | None = None,
+):
+    """Drop-in replacement for core.cubes.project_scube: (clipped, displacement)."""
+    if interpret is None:
+        interpret = _is_cpu()
+    shape, dtype = eps.shape, eps.dtype
+    flat = eps.astype(jnp.float32).reshape(-1)
+    chunk = block_rows * LANES
+    pad = (-flat.size) % chunk
+    flat = jnp.pad(flat, (0, pad))
+    tiled = flat.reshape(-1, LANES)
+    E_arr = jnp.asarray(E, dtype=jnp.float32)
+    pointwise = E_arr.ndim > 0
+    if pointwise:
+        e_flat = jnp.pad(jnp.broadcast_to(E_arr, shape).astype(jnp.float32).reshape(-1), (0, pad), constant_values=jnp.inf)
+        e_in = e_flat.reshape(-1, LANES)
+    else:
+        e_in = E_arr.reshape(1, 1)
+    c, ed = scube_pallas(tiled, e_in, pointwise=pointwise, interpret=interpret, block_rows=block_rows)
+
+    def untile(t):
+        f = t.reshape(-1)
+        if pad:
+            f = f[:-pad]
+        return f.reshape(shape).astype(dtype)
+
+    return untile(c), untile(ed)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused s-cube projection (paper Alg. 1 lines 12-14)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def project_scube_fused_ref(eps: jnp.ndarray, E):
+    """Clip spatial errors to +-E; returns (clipped, displacement)."""
+    clipped = jnp.clip(eps, -E, E)
+    return clipped, clipped - eps

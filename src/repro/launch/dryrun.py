@@ -1,0 +1,188 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+
+  * 16x16 single-pod mesh AND 2x16x16 multi-pod mesh,
+  * every assigned architecture x its runnable input shapes,
+  * ``.lower().compile()`` must succeed; we record memory_analysis(),
+    cost_analysis(), and the collective-bytes breakdown parsed from the
+    optimized HLO (inputs to EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out dryrun_results.json [--resume]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<ty>[a-z0-9]+)\[(?P<dims>[0-9,]*)\][^ ]*)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
+)
+TUPLE_RE = re.compile(
+    r"=\s*\((?P<tup>[^)]*)\)\s*(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
+)
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(ty: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(ty, 4)
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    per_op = {}
+    for line in hlo_text.splitlines():
+        m = TUPLE_RE.search(line)
+        if m:
+            op = m.group("op")
+            tot = sum(_shape_bytes(t, d) for t, d in SHAPE_RE.findall(m.group("tup")))
+            per_op[op] = per_op.get(op, 0) + tot
+            continue
+        m = COLLECTIVE_RE.search(line)
+        if m and m.group("ty"):
+            op = m.group("op")
+            per_op[op] = per_op.get(op, 0) + _shape_bytes(m.group("ty"), m.group("dims"))
+    return per_op
+
+
+def run_cell(arch: str, shape_id: str, multi_pod: bool, extra_cfg=None):
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import make_step
+
+    cfg = get_config(arch, **(extra_cfg or {}))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    step, args, in_sh, out_sh = make_step(cfg, shape_id, mesh)
+    with mesh:
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+
+    # Trip-count-aware graph walk: XLA's cost_analysis counts scan bodies
+    # once; our layer stacks are scans, so the corrected numbers come from
+    # repro.launch.hlo_cost (see that module's docstring).
+    from repro.launch.hlo_cost import analyze_hlo
+
+    graph = analyze_hlo(hlo_text)
+    result = {
+        "arch": arch,
+        "shape": shape_id,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": graph.flops,
+        "bytes_accessed": graph.bytes,
+        "collective_bytes": graph.collectives,
+        "unknown_trip_whiles": graph.unknown_trips,
+        "xla_cost_flops_bodyonce": cost.get("flops", 0.0),
+        "xla_cost_bytes_bodyonce": cost.get("bytes accessed", 0.0),
+        "collective_bytes_bodyonce": coll,
+        "memory": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_size_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--resume", action="store_true", help="skip cells already in --out")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS, get_config
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    done = set()
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+        done = {(r["arch"], r["shape"], r["mesh"]) for r in results if r.get("ok")}
+
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = list(cfg.cells()) if args.shape == "all" else args.shape.split(",")
+        for shape_id in shapes:
+            if shape_id not in cfg.cells():
+                results.append(
+                    {"arch": arch, "shape": shape_id, "skipped": True,
+                     "reason": "full-attention arch: long_500k requires sub-quadratic decode state"}
+                )
+                continue
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                if (arch, shape_id, mesh_name) in done:
+                    continue
+                label = f"{arch} x {shape_id} x {mesh_name}"
+                print(f"[dryrun] {label} ...", flush=True)
+                try:
+                    r = run_cell(arch, shape_id, multi)
+                    print(
+                        f"[dryrun] {label} OK lower={r['lower_s']}s compile={r['compile_s']}s "
+                        f"flops={r['flops']:.3e} coll={sum(r['collective_bytes'].values()):.3e}B",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    r = {
+                        "arch": arch, "shape": shape_id, "mesh": mesh_name,
+                        "ok": False, "error": f"{type(e).__name__}: {e}",
+                    }
+                    print(f"[dryrun] {label} FAIL: {r['error']}", flush=True)
+                    if args.verbose:
+                        traceback.print_exc()
+                results.append(r)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results if r.get("ok"))
+    n_fail = sum(1 for r in results if r.get("ok") is False)
+    n_skip = sum(1 for r in results if r.get("skipped"))
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed, {n_skip} skipped -> {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — required because the
+dry-run must set XLA_FLAGS before any jax initialization, and smoke
+tests/benches must keep seeing 1 CPU device.
+
+Single pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods = 512 chips
+as (pod=2, data=16, model=16); the pod axis is the outer data-parallel/FSDP
+axis (gradient all-reduce crosses the pod interconnect; see sharding/rules).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (elastic re-planning, tests)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: Optional[int] = None):
+    """Mesh over whatever devices exist locally (tests / CPU examples)."""
+    n = len(jax.devices())
+    mp = model_parallel or 1
+    assert n % mp == 0
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """All data-parallel axes of a mesh (pod is outer DP when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

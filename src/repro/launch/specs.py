@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+``input_specs(cfg, shape_id)`` returns the abstract arguments for the step
+function of that cell kind:
+
+  train:   {"batch": {...}}                               -> train_step
+  prefill: {"batch": {...}, "cache": fresh-cache specs}   -> prefill_step
+  decode:  {"tokens": (B,1), "cache": full-length specs}  -> serve_step
+
+Modality frontends are STUBS: audio provides precomputed frame embeddings,
+vlm provides precomputed patch embeddings (assignment spec).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ArchConfig
+from repro.models.layers import dtype_of
+from repro.models.model import build_model
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ArchConfig, seq: int, batch: int) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    act = dtype_of(cfg.dtype)
+    if cfg.family == "vlm":
+        text = seq - cfg.vision_tokens
+        assert text > 0, "vlm sequence must exceed vision token count"
+        out["tokens"] = _sds((batch, text), jnp.int32)
+        out["patches"] = _sds((batch, cfg.vision_tokens, cfg.vision_dim), act)
+    elif cfg.family == "audio":
+        out["tokens"] = _sds((batch, seq), jnp.int32)
+        out["frames"] = _sds((batch, cfg.encoder_seq, cfg.d_model), act)
+    else:
+        out["tokens"] = _sds((batch, seq), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int) -> Any:
+    bundle = build_model(cfg)
+    return jax.eval_shape(lambda: bundle.init_cache(batch, max_len))
+
+
+def param_specs(cfg: ArchConfig) -> Any:
+    bundle = build_model(cfg)
+    return jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ArchConfig, shape_id: str) -> Dict[str, Any]:
+    seq, batch, kind = SHAPES[shape_id]
+    if kind == "train":
+        return {"batch": batch_specs(cfg, seq, batch)}
+    if kind == "prefill":
+        return {
+            "batch": batch_specs(cfg, seq, batch),
+            "cache": cache_specs(cfg, batch, seq),
+        }
+    if kind == "decode":
+        return {
+            "tokens": _sds((batch, 1), jnp.int32),
+            "cache": cache_specs(cfg, batch, seq),
+        }
+    raise ValueError(shape_id)

@@ -1,0 +1,110 @@
+"""Step functions (train / prefill / serve) + their sharding assignments.
+
+``make_step(cfg, kind, mesh)`` returns (fn, in_shardings, out_shardings,
+abstract_args) ready for ``jax.jit(...).lower(...).compile()`` — used by the
+dry-run, the trainer, and the serving engine alike.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ArchConfig
+from repro.launch.specs import input_specs, param_specs
+from repro.models.model import ModelBundle, build_model
+from repro.optim.adamw import AdamW
+from repro.optim.grad_compress import compress_gradients
+from repro.sharding.rules import batch_pspec, cache_pspecs, param_pspecs, to_shardings
+
+
+def make_train_step(bundle: ModelBundle, optimizer: AdamW):
+    cfg = bundle.cfg
+    comp = cfg.compression
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(bundle.loss)(params, batch)
+        if comp.grad_compression:
+            grads = compress_gradients(
+                grads,
+                bits=comp.grad_bits,
+                E_rel=comp.grad_E_rel,
+                Delta_rel=comp.grad_Delta_rel,
+                block=comp.grad_block,
+            )
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(bundle: ModelBundle):
+    def prefill_step(params, batch, cache):
+        return bundle.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def make_serve_step(bundle: ModelBundle):
+    def serve_step(params, tokens, cache):
+        return bundle.decode(params, tokens, cache)
+
+    return serve_step
+
+
+def make_step(cfg: ArchConfig, shape_id: str, mesh, optimizer: AdamW | None = None):
+    """Build (step_fn, args_abstract, in_shardings, out_shardings)."""
+    import dataclasses as _dc
+
+    # inject mesh axes so model code can place adaptive sharding constraints
+    cfg = _dc.replace(cfg, mesh_axes=tuple(zip(mesh.axis_names, mesh.devices.shape)))
+    bundle = build_model(cfg)
+    seq, batch, kind = SHAPES[shape_id]
+    optimizer = optimizer or AdamW()
+
+    p_abs = param_specs(cfg)
+    p_spec = param_pspecs(p_abs, mesh)
+    p_shard = to_shardings(p_spec, mesh)
+    specs = input_specs(cfg, shape_id)
+
+    if kind == "train":
+        step = make_train_step(bundle, optimizer)
+        opt_abs = jax.eval_shape(optimizer.init, p_abs)
+        opt_shard = to_shardings(optimizer.state_pspecs(p_spec), mesh)
+        b_shard = to_shardings(batch_pspec(specs["batch"], mesh), mesh)
+        args = (p_abs, opt_abs, specs["batch"])
+        in_sh = (p_shard, opt_shard, b_shard)
+        out_sh = (p_shard, opt_shard, NamedSharding(mesh, P()))
+        return step, args, in_sh, out_sh
+
+    c_shard = to_shardings(cache_pspecs(specs["cache"], mesh), mesh)
+    if kind == "prefill":
+        step = make_prefill_step(bundle)
+        b_shard = to_shardings(batch_pspec(specs["batch"], mesh), mesh)
+        args = (p_abs, specs["batch"], specs["cache"])
+        in_sh = (p_shard, b_shard, c_shard)
+        logits_sh = NamedSharding(mesh, _logits_spec(specs["batch"], mesh))
+        out_sh = (logits_sh, c_shard)
+        return step, args, in_sh, out_sh
+
+    if kind == "decode":
+        step = make_serve_step(bundle)
+        t_shard = to_shardings(batch_pspec({"tokens": specs["tokens"]}, mesh), mesh)["tokens"]
+        args = (p_abs, specs["tokens"], specs["cache"])
+        in_sh = (p_shard, t_shard, c_shard)
+        logits_sh = NamedSharding(mesh, _logits_spec({"tokens": specs["tokens"]}, mesh))
+        out_sh = (logits_sh, c_shard)
+        return step, args, in_sh, out_sh
+
+    raise ValueError(kind)
+
+
+def _logits_spec(batch_specs_dict, mesh) -> P:
+    """Logits (b, s, V): batch over DP axes when divisible, vocab on model."""
+    spec = batch_pspec(batch_specs_dict, mesh)["tokens"]
+    b_axis = spec[0] if len(spec) else None
+    return P(b_axis, None, "model")

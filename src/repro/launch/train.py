@@ -1,0 +1,54 @@
+"""Production train entry point.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --preset smoke \
+        --steps 100 --ckpt-dir /tmp/run1
+
+On a real TPU pod this runs under the production mesh (one process per host,
+jax.distributed.initialize); on CPU it runs the same code path on the host
+mesh.  Restart-from-checkpoint, straggler tracking, and FFCz gradient /
+checkpoint compression are wired through the same Trainer the tests use.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import CompressionConfig, get_config, get_smoke_config
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_run")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--ckpt-compression", action="store_true")
+    ap.add_argument("--inject-failure-at", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.preset == "full" else get_smoke_config(args.arch)
+    cfg = dataclasses.replace(
+        cfg,
+        compression=CompressionConfig(
+            grad_compression=args.grad_compression,
+            checkpoint_compression=args.ckpt_compression,
+        ),
+    )
+    run = TrainerConfig(
+        seq_len=args.seq_len, global_batch=args.global_batch, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, inject_failure_at=args.inject_failure_at,
+    )
+    tr = Trainer(cfg, run)
+    out = tr.train(args.steps)
+    print(f"done: step={out['final_step']} loss={out['final_loss']:.4f} "
+          f"stragglers={len(out['straggler_events'])}")
+
+
+if __name__ == "__main__":
+    main()

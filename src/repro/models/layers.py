@@ -1,0 +1,149 @@
+"""Common layers: RMSNorm, RoPE, SwiGLU MLP, embeddings, initializers.
+
+Functional style: params are nested dicts of jnp arrays; every layer is a
+pure function ``f(params, x, ...)``.  Initializers take explicit PRNG keys.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (b, h, s, d); positions: (b, s) or (s,) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (d/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # (b,1,s,d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embed(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Traced sinusoidal embeddings for given integer positions -> (s, d).
+
+    jnp (not a table constant) so decode-time positions stay dynamic and the
+    HLO carries no large embedded constants.
+    """
+    pos = positions.astype(jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2.0 * i / d)
+    out = jnp.stack([jnp.sin(angle), jnp.cos(angle)], axis=-1).reshape(positions.shape[0], d)
+    return out
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / d)
+    out = np.zeros((seq, d), dtype=np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def swiglu_init(key, d: int, f: int, dtype) -> Params:
+    """Fused gate+up projection stored 3D (d, 2, f): one column-parallel
+    matmul -> one dx all-reduce in the backward instead of two, and the
+    gate/up split lands on the unsharded middle axis (communication-free;
+    slicing a flat (d, 2f) activation across TP shards costs
+    activation-sized collective-permutes — measured, §Perf iter 3)."""
+    k1, k3 = jax.random.split(key)
+    scale = 1.0 / np.sqrt(d)
+    return {
+        "w_gu": (jax.random.normal(k1, (d, 2, f), dtype=jnp.float32) * scale).astype(dtype),
+        "w_down": dense_init(k3, f, d, dtype),
+    }
+
+
+def swiglu(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    gu = jnp.einsum("...d,dcf->...cf", x, params["w_gu"])
+    return (jax.nn.silu(gu[..., 0, :]) * gu[..., 1, :]) @ params["w_down"]
+
+
+def gelu_mlp_init(key, d: int, f: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"w_up": dense_init(k1, d, f, dtype), "w_down": dense_init(k2, f, d, dtype)}
+
+
+def gelu_mlp(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x @ params["w_up"]) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray | None = None):
+    """Token-level CE; logits (..., V) float, labels (...) int32; mask optional.
+
+    The gold logit is picked via an iota comparison instead of
+    ``take_along_axis`` so a vocab-sharded logits tensor never gets
+    all-gathered: both the logsumexp and the masked-sum reduce the sharded
+    axis locally and all-reduce only (b, s)-sized partials (§Perf iter 2).
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,436 @@
+"""Top-level model builder: one functional bundle per architecture family.
+
+``build_model(cfg)`` returns a :class:`ModelBundle` with pure functions:
+
+  init(rng)                          -> params
+  loss(params, batch)                -> scalar CE loss        (train_step)
+  prefill(params, batch, cache)      -> (last logits, cache)  (prefill_step)
+  decode(params, tokens, cache)      -> (logits, cache)       (serve_step)
+  init_cache(batch_size, max_len)    -> cache pytree
+
+Layer stacks are lax.scan'd (leading layer/group axis on params and caches)
+so compiled HLO size is O(1) in depth — required for the 40-cell x 2-mesh
+dry-run budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.models import transformer as tf
+from repro.models.attention import init_kv_cache
+from repro.models.layers import (
+    cross_entropy_loss,
+    dense_init,
+    dtype_of,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    sinusoidal_embed,
+)
+from repro.models.ssm import init_mamba_cache, mamba2_apply, mamba2_init
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+
+
+def build_model(cfg: ArchConfig) -> ModelBundle:
+    if cfg.family in ("dense", "vlm"):
+        return _build_dense(cfg)
+    if cfg.family == "moe":
+        return _build_moe(cfg)
+    if cfg.family == "ssm":
+        return _build_ssm(cfg)
+    if cfg.family == "hybrid":
+        return _build_zamba(cfg)
+    if cfg.family == "audio":
+        return _build_whisper(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+
+
+def _head_init(key, cfg) -> Params:
+    ke, kh = jax.random.split(key)
+    dtype = dtype_of(cfg.param_dtype)
+    v = cfg.vocab_padded  # Megatron-style padding keeps vocab TP-shardable
+    p = {"embed": embed_init(ke, v, cfg.d_model, dtype), "ln_f": rmsnorm_init(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(kh, cfg.d_model, v, dtype)
+    return p
+
+
+def _logits(params: Params, h: jnp.ndarray, cfg) -> jnp.ndarray:
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    w = w.astype(h.dtype)
+    if cfg.mesh_axes and cfg.axis_size("model") > 1:
+        from jax.sharding import PartitionSpec as P
+
+        # force the all-gather-weight strategy: contract over a REPLICATED
+        # d_model and emit vocab-sharded logits, instead of GSPMD's partial-sum
+        # all-reduce of the full fp32 logits tensor (§Perf iter 2)
+        w = jax.lax.with_sharding_constraint(w, P(None, "model"))
+        logits = h @ w
+        dp = cfg.dp_axes()
+        bspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+        spec = [None] * logits.ndim
+        spec[-1] = "model"
+        if logits.shape[0] % max(int(np.prod([cfg.axis_size(a) for a in (dp or ())])), 1) == 0 and dp:
+            spec[0] = bspec
+        logits = jax.lax.with_sharding_constraint(logits, P(*spec))
+    else:
+        logits = h @ w
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, jnp.finfo(logits.dtype).min, logits)
+    return logits
+
+
+def _embed(params: Params, tokens: jnp.ndarray, cfg) -> jnp.ndarray:
+    return params["embed"].astype(dtype_of(cfg.dtype))[tokens]
+
+
+def _lm_loss(logits: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return cross_entropy_loss(logits[:, :-1], tokens[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# dense (+ vlm = dense backbone + projector stub)
+
+
+def _build_dense(cfg: ArchConfig) -> ModelBundle:
+    is_vlm = cfg.family == "vlm"
+
+    def init(rng) -> Params:
+        k_head, k_layers, k_proj = jax.random.split(rng, 3)
+        p = _head_init(k_head, cfg)
+        p["layers"] = tf.stack_init(k_layers, cfg.n_layers, lambda k: tf.dense_block_init(k, cfg))
+        if is_vlm:
+            k1, k2 = jax.random.split(k_proj)
+            dtype = dtype_of(cfg.param_dtype)
+            p["projector"] = {
+                "w1": dense_init(k1, cfg.vision_dim, cfg.d_model, dtype),
+                "w2": dense_init(k2, cfg.d_model, cfg.d_model, dtype),
+            }
+        return p
+
+    def backbone(params, x, cache=None, from_zero=False):
+        body = tf.remat_wrap(
+            lambda h, pc: tf.dense_block_apply(pc[0], h, cfg, cache=pc[1], from_zero=from_zero),
+            cfg.remat,
+        )
+        x, new_cache = jax.lax.scan(lambda h, pc: body(h, pc), x, (params["layers"], cache))
+        return x, new_cache
+
+    def inputs_from_batch(params, batch):
+        x = _embed(params, batch["tokens"], cfg)
+        if is_vlm:
+            pe = batch["patches"].astype(x.dtype)
+            pe = jax.nn.gelu(pe @ params["projector"]["w1"]) @ params["projector"]["w2"]
+            x = jnp.concatenate([pe, x], axis=1)
+        return x
+
+    def loss(params, batch):
+        x = inputs_from_batch(params, batch)
+        h, _ = backbone(params, x, cache=None)
+        logits = _logits(params, h, cfg)
+        if is_vlm:
+            v = cfg.vision_tokens
+            return cross_entropy_loss(logits[:, v - 1 : -1], batch["tokens"])
+        return _lm_loss(logits, batch["tokens"])
+
+    def init_cache(batch_size: int, max_len: int):
+        dtype = dtype_of(cfg.dtype)
+        one = lambda _k: init_kv_cache(batch_size, cfg.n_kv_heads, max_len, cfg.resolved_head_dim, dtype)
+        return jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[one(i) for i in range(cfg.n_layers)]
+        )
+
+    def prefill(params, batch, cache):
+        x = inputs_from_batch(params, batch)
+        h, cache = backbone(params, x, cache=cache, from_zero=True)
+        return _logits(params, h[:, -1:], cfg), cache
+
+    def decode(params, tokens, cache):
+        x = _embed(params, tokens, cfg)
+        h, cache = backbone(params, x, cache=cache)
+        return _logits(params, h, cfg), cache
+
+    return ModelBundle(cfg, init, loss, prefill, decode, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+
+
+def _build_moe(cfg: ArchConfig) -> ModelBundle:
+    n_groups = cfg.n_layers // cfg.moe_every
+    assert n_groups * cfg.moe_every == cfg.n_layers, "moe_every must divide n_layers"
+
+    def init(rng) -> Params:
+        k_head, k_groups = jax.random.split(rng)
+        p = _head_init(k_head, cfg)
+        p["groups"] = tf.stack_init(k_groups, n_groups, lambda k: tf.moe_group_init(k, cfg))
+        return p
+
+    def backbone(params, x, cache=None, from_zero=False):
+        body = tf.remat_wrap(
+            lambda h, pc: tf.moe_group_apply(pc[0], h, cfg, caches=pc[1], from_zero=from_zero),
+            cfg.remat,
+        )
+        x, new_cache = jax.lax.scan(lambda h, pc: body(h, pc), x, (params["groups"], cache))
+        return x, new_cache
+
+    def loss(params, batch):
+        x = _embed(params, batch["tokens"], cfg)
+        h, _ = backbone(params, x, cache=None)
+        return _lm_loss(_logits(params, h, cfg), batch["tokens"])
+
+    def init_cache(batch_size: int, max_len: int):
+        dtype = dtype_of(cfg.dtype)
+        kv = lambda: init_kv_cache(batch_size, cfg.n_kv_heads, max_len, cfg.resolved_head_dim, dtype)
+
+        def one_group(_i):
+            c = {"moe": kv()}
+            if cfg.moe_every > 1:
+                c["dense"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *[kv() for _ in range(cfg.moe_every - 1)]
+                )
+            return c
+
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[one_group(i) for i in range(n_groups)])
+
+    def prefill(params, batch, cache):
+        x = _embed(params, batch["tokens"], cfg)
+        h, cache = backbone(params, x, cache=cache, from_zero=True)
+        return _logits(params, h[:, -1:], cfg), cache
+
+    def decode(params, tokens, cache):
+        x = _embed(params, tokens, cfg)
+        h, cache = backbone(params, x, cache=cache)
+        return _logits(params, h, cfg), cache
+
+    return ModelBundle(cfg, init, loss, prefill, decode, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# SSM (mamba2)
+
+
+def _build_ssm(cfg: ArchConfig) -> ModelBundle:
+    def init(rng) -> Params:
+        k_head, k_layers = jax.random.split(rng)
+        p = _head_init(k_head, cfg)
+        p["layers"] = tf.stack_init(k_layers, cfg.n_layers, lambda k: mamba2_init(k, cfg))
+        return p
+
+    def backbone(params, x, cache=None, from_zero=False):
+        del from_zero  # attention-free
+        def block(h, pc):
+            out, nc = mamba2_apply(pc[0], h, cfg, cache=pc[1])
+            return h + out, nc
+
+        body = tf.remat_wrap(block, cfg.remat)
+        x, new_cache = jax.lax.scan(lambda h, pc: body(h, pc), x, (params["layers"], cache))
+        return x, new_cache
+
+    def loss(params, batch):
+        x = _embed(params, batch["tokens"], cfg)
+        h, _ = backbone(params, x, cache=None)
+        return _lm_loss(_logits(params, h, cfg), batch["tokens"])
+
+    def init_cache(batch_size: int, max_len: int):
+        # max_len is irrelevant: O(1) state (this is the long_500k superpower)
+        dtype = dtype_of(cfg.dtype)
+        one = lambda: init_mamba_cache(batch_size, cfg, dtype)
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[one() for _ in range(cfg.n_layers)])
+
+    def prefill(params, batch, cache):
+        x = _embed(params, batch["tokens"], cfg)
+        h, cache = backbone(params, x, cache=cache, from_zero=True)
+        return _logits(params, h[:, -1:], cfg), cache
+
+    def decode(params, tokens, cache):
+        x = _embed(params, tokens, cfg)
+        h, cache = backbone(params, x, cache=cache)
+        return _logits(params, h, cfg), cache
+
+    return ModelBundle(cfg, init, loss, prefill, decode, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid
+
+
+def _build_zamba(cfg: ArchConfig) -> ModelBundle:
+    n_groups = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers - n_groups * cfg.attn_every
+
+    def init(rng) -> Params:
+        k_head, k_shared, k_groups, k_tail = jax.random.split(rng, 4)
+        p = _head_init(k_head, cfg)
+        p["shared"] = tf.zamba_shared_init(k_shared, cfg)
+        p["groups"] = tf.stack_init(k_groups, n_groups, lambda k: tf.zamba_group_init(k, cfg))
+        if tail:
+            p["tail"] = tf.stack_init(k_tail, tail, lambda k: mamba2_init(k, cfg))
+        return p
+
+    def backbone(params, x, cache=None, from_zero=False):
+        embed0 = x  # original embeddings, re-fed to every shared-attn call
+
+        def group(h, pc):
+            h, nc = tf.zamba_group_apply(
+                pc[0], params["shared"], h, embed0, cfg, caches=pc[1], from_zero=from_zero
+            )
+            return h, nc
+
+        body = tf.remat_wrap(group, cfg.remat)
+        g_cache = cache["groups"] if cache is not None else None
+        x, new_g = jax.lax.scan(lambda h, pc: body(h, pc), x, (params["groups"], g_cache))
+        new_t = None
+        if tail:
+            t_cache = cache["tail"] if cache is not None else None
+
+            def tail_block(h, pc):
+                out, nc = mamba2_apply(pc[0], h, cfg, cache=pc[1])
+                return h + out, nc
+
+            x, new_t = jax.lax.scan(lambda h, pc: tail_block(h, pc), x, (params["tail"], t_cache))
+        if cache is None:
+            return x, None
+        out_cache = {"groups": new_g}
+        if tail:
+            out_cache["tail"] = new_t
+        return x, out_cache
+
+    def loss(params, batch):
+        x = _embed(params, batch["tokens"], cfg)
+        h, _ = backbone(params, x, cache=None)
+        return _lm_loss(_logits(params, h, cfg), batch["tokens"])
+
+    def init_cache(batch_size: int, max_len: int):
+        dtype = dtype_of(cfg.dtype)
+        kv = lambda: init_kv_cache(batch_size, cfg.n_kv_heads, max_len, cfg.resolved_head_dim, dtype)
+        mc = lambda: init_mamba_cache(batch_size, cfg, dtype)
+
+        def one_group(_i):
+            return {
+                "attn": kv(),
+                "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *[mc() for _ in range(cfg.attn_every)]),
+            }
+
+        c = {"groups": jax.tree.map(lambda *xs: jnp.stack(xs), *[one_group(i) for i in range(n_groups)])}
+        if tail:
+            c["tail"] = jax.tree.map(lambda *xs: jnp.stack(xs), *[mc() for _ in range(tail)])
+        return c
+
+    def prefill(params, batch, cache):
+        x = _embed(params, batch["tokens"], cfg)
+        h, cache = backbone(params, x, cache=cache, from_zero=True)
+        return _logits(params, h[:, -1:], cfg), cache
+
+    def decode(params, tokens, cache):
+        x = _embed(params, tokens, cfg)
+        h, cache = backbone(params, x, cache=cache)
+        return _logits(params, h, cfg), cache
+
+    return ModelBundle(cfg, init, loss, prefill, decode, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# Whisper (encoder-decoder)
+
+
+def _build_whisper(cfg: ArchConfig) -> ModelBundle:
+    def init(rng) -> Params:
+        k_head, k_enc, k_dec = jax.random.split(rng, 3)
+        p = _head_init(k_head, cfg)
+        p["encoder"] = tf.stack_init(k_enc, cfg.encoder_layers, lambda k: tf.encoder_block_init(k, cfg))
+        p["decoder"] = tf.stack_init(k_dec, cfg.n_layers, lambda k: tf.decoder_xblock_init(k, cfg))
+        return p
+
+    def encode(params, frames):
+        x = frames.astype(dtype_of(cfg.dtype))
+        x = x + sinusoidal_embed(jnp.arange(x.shape[1]), cfg.d_model).astype(x.dtype)[None]
+
+        def body(h, p_layer):
+            return tf.encoder_block_apply(p_layer, h, cfg), None
+
+        x, _ = jax.lax.scan(tf.remat_wrap(body, cfg.remat), x, params["encoder"])
+        return x
+
+    def cross_kvs(params, enc_out):
+        def one(p_layer):
+            return tf.cross_kv_from_encoder(p_layer, enc_out, cfg)
+
+        return jax.vmap(one, in_axes=0, out_axes=0)(params["decoder"])
+
+    def run_decoder(params, x, kvs, cache=None, from_zero=False):
+        def body(h, pkc):
+            p_layer, kv_layer, c_layer = pkc
+            h, nc = tf.decoder_xblock_apply(
+                p_layer, h, kv_layer, cfg, cache=c_layer, from_zero=from_zero
+            )
+            return h, nc
+
+        x, new_cache = jax.lax.scan(
+            tf.remat_wrap(body, cfg.remat), x, (params["decoder"], kvs, cache)
+        )
+        return x, new_cache
+
+    def dec_embed(params, tokens, pos0):
+        x = _embed(params, tokens, cfg)
+        s = x.shape[1]
+        positions = pos0 + jnp.arange(s)
+        return x + sinusoidal_embed(positions, cfg.d_model).astype(x.dtype)[None]
+
+    def loss(params, batch):
+        enc = encode(params, batch["frames"])
+        kvs = cross_kvs(params, enc)
+        x = dec_embed(params, batch["tokens"], 0)
+        h, _ = run_decoder(params, x, kvs, cache=None)
+        return _lm_loss(_logits(params, h, cfg), batch["tokens"])
+
+    def init_cache(batch_size: int, max_len: int):
+        dtype = dtype_of(cfg.dtype)
+        kv = lambda: init_kv_cache(batch_size, cfg.n_kv_heads, max_len, cfg.resolved_head_dim, dtype)
+        self_c = jax.tree.map(lambda *xs: jnp.stack(xs), *[kv() for _ in range(cfg.n_layers)])
+        hd = cfg.resolved_head_dim
+        cross = (
+            jnp.zeros((cfg.n_layers, batch_size, cfg.n_kv_heads, cfg.encoder_seq, hd), dtype=dtype),
+            jnp.zeros((cfg.n_layers, batch_size, cfg.n_kv_heads, cfg.encoder_seq, hd), dtype=dtype),
+        )
+        return {"self": self_c, "cross": cross}
+
+    def prefill(params, batch, cache):
+        enc = encode(params, batch["frames"])
+        kvs = cross_kvs(params, enc)
+        x = dec_embed(params, batch["tokens"], 0)
+        h, self_c = run_decoder(params, x, kvs, cache=cache["self"], from_zero=True)
+        return _logits(params, h[:, -1:], cfg), {"self": self_c, "cross": kvs}
+
+    def decode(params, tokens, cache):
+        pos = cache["self"]["pos"][0]
+        x = dec_embed(params, tokens, pos)
+        h, self_c = run_decoder(params, x, cache["cross"], cache=cache["self"])
+        return _logits(params, h, cfg), {"self": self_c, "cross": cache["cross"]}
+
+    return ModelBundle(cfg, init, loss, prefill, decode, init_cache)

@@ -1,0 +1,241 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute inside chunks of length Q, linear recurrence across chunk summaries
+(a lax.scan over chunks), giving O(L*Q) work and O(1) decode state.  Decode
+is the exact SSM recurrence on a (b, h, p, n) state plus a (k-1)-tap causal
+conv cache — this is why the ssm/hybrid families run the long_500k cell.
+
+Layout: b batch, l seq, h heads, p headdim, g B/C groups, n state dim.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+Params = Dict[str, Any]
+
+
+def mamba2_init(key, cfg) -> Params:
+    d = cfg.d_model
+    d_inner = cfg.d_inner
+    h = cfg.ssm_nheads
+    g = cfg.ssm_ngroups
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * g * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    # in_proj -> [z (d_inner), x (d_inner), B (g*n), C (g*n), dt (h)]
+    return {
+        "in_proj": dense_init(k1, d, 2 * d_inner + 2 * g * n + h, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_kernel, conv_dim), dtype=jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), dtype=jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01))).astype(jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(k3, d_inner, d, dtype),
+    }
+
+
+def _split_proj(proj: jnp.ndarray, cfg):
+    d_inner, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner : 2 * d_inner + 2 * g * n]
+    dt = proj[..., 2 * d_inner + 2 * g * n :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along seq; xBC (b, l, c), w (k, c)."""
+    k = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xBC.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _segsum_decay(dtA: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """dtA: (..., q, h) chunk-local decays.  Returns (cumsum (...,q,h),
+    L (..., h, q, q)) with L[i,j] = exp(sum_{j<m<=i} dtA[m]) for i>=j else 0."""
+    cum = jnp.cumsum(dtA, axis=-2)  # (..., q, h)
+    ci = jnp.swapaxes(cum, -1, -2)[..., :, :, None]  # (..., h, q, 1)
+    cj = jnp.swapaxes(cum, -1, -2)[..., :, None, :]  # (..., h, 1, q)
+    diff = ci - cj
+    q = dtA.shape[-2]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    L = jnp.where(mask, jnp.exp(diff), 0.0)
+    return cum, L
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (b, l, h, p) already dt-weighted NOT — raw x
+    dt: jnp.ndarray,  # (b, l, h) positive
+    A: jnp.ndarray,  # (h,) positive decay rates (state uses exp(-dt*A))
+    B: jnp.ndarray,  # (b, l, g, n)
+    C: jnp.ndarray,  # (b, l, g, n)
+    chunk: int,
+    initial_state: jnp.ndarray | None = None,  # (b, h, p, n)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.  Returns (y (b,l,h,p), final_state (b,h,p,n))."""
+    bsz, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = x.shape[1]
+    nc = L // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    Bc = B.reshape(bsz, nc, chunk, g, n)
+    Cc = C.reshape(bsz, nc, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b,nc,q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dtA = -dtc * A[None, None, None, :]  # (b,nc,q,h) negative
+    cum, Lmat = _segsum_decay(dtA)  # cum (b,nc,q,h); Lmat (b,nc,h,q,q)
+    xdt = xc * dtc[..., None]  # (b,nc,q,h,p)
+
+    # intra-chunk (quadratic, attention-like)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh)  # (b,nc,h,q,q)
+    y_intra = jnp.einsum("bchij,bchij,bcjhp->bcihp", scores, Lmat, xdt)
+
+    # chunk summary states: decay from position to end of chunk
+    decay_end = jnp.exp(cum[..., -1:, :] - cum)  # (b,nc,q,h)
+    S_chunk = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bh, decay_end, xdt)  # (b,nc,h,p,n)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(jnp.sum(dtA, axis=2))  # (b,nc,h)
+    S0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((bsz, h, p, n), dtype=x.dtype)
+    )
+
+    def step(S_prev, inputs):
+        S_c, dec = inputs  # (b,h,p,n), (b,h)
+        S_new = S_prev * dec[:, :, None, None] + S_c
+        return S_new, S_prev
+
+    S_final, S_prevs = jax.lax.scan(
+        step,
+        S0.astype(jnp.float32),
+        (jnp.moveaxis(S_chunk, 1, 0).astype(jnp.float32), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)  # (b,nc,h,p,n) state entering each chunk
+
+    # inter-chunk contribution: C_i * decay_from_start * S_prev
+    decay_in = jnp.exp(cum)  # (b,nc,q,h) decay from chunk start to position (inclusive)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", Ch, decay_in, S_prevs.astype(x.dtype))
+
+    y = (y_intra + y_inter).reshape(bsz, L, h, p)[:, :l]
+    return y, S_final.astype(x.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, initial_state=None):
+    """Sequential oracle: exact per-step recurrence (tests, tiny shapes)."""
+    bsz, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+    S = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((bsz, h, p, n), dtype=jnp.float32)
+    )
+    ys = []
+    for t in range(l):
+        dA = jnp.exp(-dt[:, t] * A[None, :])  # (b,h)
+        S = S * dA[:, :, None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", x[:, t].astype(jnp.float32), Bh[:, t].astype(jnp.float32), dt[:, t]
+        )
+        ys.append(jnp.einsum("bhpn,bhn->bhp", S, Ch[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1).astype(x.dtype), S.astype(x.dtype)
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One-token recurrence.  state (b,h,p,n); x_t (b,h,p); dt_t (b,h);
+    B_t/C_t (b,g,n).  Returns (y (b,h,p), new state)."""
+    h = x_t.shape[1]
+    rep = h // B_t.shape[1]
+    Bh = jnp.repeat(B_t, rep, axis=1)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    dA = jnp.exp(-dt_t * A[None, :])
+    state = state * dA[:, :, None, None] + jnp.einsum("bhp,bhn,bh->bhpn", x_t, Bh, dt_t)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+
+
+def mamba2_apply(
+    params: Params,
+    hidden: jnp.ndarray,  # (b, l, d_model)
+    cfg,
+    cache: Params | None = None,
+) -> Tuple[jnp.ndarray, Params | None]:
+    """Mamba2 block.  cache={"conv": (b,k-1,conv_dim), "state": (b,h,p,n)}
+    enables single/few-token decode; cache=None is training/prefill."""
+    bsz, l, _ = hidden.shape
+    h, p, g, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+    proj = hidden @ params["in_proj"]
+    z, xBC_raw, dt_raw = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (b,l,h)
+    A = jnp.exp(params["A_log"])  # (h,) positive
+
+    new_cache = None
+    if cache is None:
+        xBC = _causal_conv(xBC_raw, params["conv_w"], params["conv_b"])
+    else:
+        k = cfg.conv_kernel
+        window = jnp.concatenate([cache["conv"].astype(xBC_raw.dtype), xBC_raw], axis=1)
+        xBC = _causal_conv(window, params["conv_w"], params["conv_b"])[:, k - 1 :]
+        new_conv = window[:, -(k - 1) :] if k > 1 else window[:, :0]
+
+    x = xBC[..., : cfg.d_inner].reshape(bsz, l, h, p)
+    B = xBC[..., cfg.d_inner : cfg.d_inner + g * n].reshape(bsz, l, g, n)
+    C = xBC[..., cfg.d_inner + g * n :].reshape(bsz, l, g, n)
+
+    if cache is None:
+        y, _final = ssd_chunked(x, dt, A, B, C, cfg.ssm_chunk)
+    elif l == 1:
+        y1, state = ssd_decode_step(
+            cache["state"].astype(jnp.float32),
+            x[:, 0].astype(jnp.float32),
+            dt[:, 0],
+            A,
+            B[:, 0].astype(jnp.float32),
+            C[:, 0].astype(jnp.float32),
+        )
+        y = y1[:, None].astype(hidden.dtype)
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "state": state.astype(cache["state"].dtype)}
+    else:
+        y, state = ssd_chunked(x, dt, A, B, C, cfg.ssm_chunk, initial_state=cache["state"].astype(x.dtype))
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "state": state.astype(cache["state"].dtype)}
+
+    y = y + x * params["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, l, cfg.d_inner).astype(hidden.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    out = (y @ params["out_proj"]).astype(hidden.dtype)
+    return out, new_cache
+
+
+def init_mamba_cache(batch: int, cfg, dtype) -> Params:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype=dtype),
+        "state": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state), dtype=jnp.float32),
+    }

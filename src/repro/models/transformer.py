@@ -1,0 +1,306 @@
+"""Block compositions for all model families, scan-stacked for O(1)-depth HLO.
+
+Every block is ``apply(params, x, ..., cache) -> (x, cache)``; stacks carry
+per-layer params/caches with a leading layer (or layer-group) axis consumed by
+``lax.scan``.  Remat policy wraps the scan body.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention_apply, attention_init, init_kv_cache
+from repro.models.layers import gelu_mlp, gelu_mlp_init, rmsnorm, rmsnorm_init, swiglu, swiglu_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import init_mamba_cache, mamba2_apply, mamba2_init
+
+Params = Dict[str, Any]
+
+
+def stack_init(key, n: int, init_fn):
+    """Initialize n copies of a block; returns pytree with leading axis n."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def remat_wrap(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    if remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    raise ValueError(f"unknown remat {remat!r}")
+
+
+# ---------------------------------------------------------------------------
+# dense decoder block (qwen2 / granite / minitron / mistral backbone)
+
+
+def dense_block_init(key, cfg) -> Params:
+    ka, km = jax.random.split(key)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "ln_attn": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attention_init(
+            ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, cfg.qkv_bias, dtype
+        ),
+        "ln_mlp": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": swiglu_init(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def dense_block_apply(params: Params, x, cfg, cache=None, positions=None, from_zero=False):
+    h, new_cache = attention_apply(
+        params["attn"],
+        rmsnorm(params["ln_attn"], x, cfg.norm_eps),
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        impl=cfg.attention_impl,
+        pos_type=cfg.pos_type,
+        rope_theta=cfg.rope_theta,
+        positions=positions,
+        cache=cache,
+        causal_scheduling=cfg.causal_scheduling,
+        mesh_axes=cfg.mesh_axes if cfg.shard_attn_activations else (),
+        from_zero=from_zero,
+    )
+    x = x + h
+    x = x + swiglu(params["mlp"], rmsnorm(params["ln_mlp"], x, cfg.norm_eps))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MoE layer group (moe_every layers; last one MoE, earlier ones dense)
+
+
+def moe_group_init(key, cfg) -> Params:
+    keys = jax.random.split(key, cfg.moe_every + 1)
+    dtype = jnp.dtype(cfg.dtype)
+    group = {"dense": [], "moe": None}
+    blocks = []
+    for i in range(cfg.moe_every - 1):
+        blocks.append(dense_block_init(keys[i], cfg))
+    group_dense = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks) if blocks else None
+    ka, km = jax.random.split(keys[-1])
+    moe_block = {
+        "ln_attn": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attention_init(
+            ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, cfg.qkv_bias, dtype
+        ),
+        "ln_mlp": rmsnorm_init(cfg.d_model, dtype),
+        "moe": moe_init(km, cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.shared_expert, dtype,
+                        n_experts_padded=cfg.n_experts_padded),
+    }
+    out = {"moe_block": moe_block}
+    if group_dense is not None:
+        out["dense_blocks"] = group_dense
+    return out
+
+
+def moe_group_apply(params: Params, x, cfg, caches=None, positions=None, from_zero=False):
+    """caches: dict {"dense": stacked cache (moe_every-1, ...) or None,
+    "moe": cache} matching the group structure."""
+    new_caches = {}
+    if "dense_blocks" in params:
+        n_dense = cfg.moe_every - 1
+        dense_caches = caches["dense"] if caches is not None else None
+        new_dense = []
+        for i in range(n_dense):
+            p_i = jax.tree.map(lambda a: a[i], params["dense_blocks"])
+            c_i = jax.tree.map(lambda a: a[i], dense_caches) if dense_caches is not None else None
+            x, nc = dense_block_apply(p_i, x, cfg, cache=c_i, positions=positions, from_zero=from_zero)
+            new_dense.append(nc)
+        if caches is not None:
+            new_caches["dense"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_dense)
+    mb = params["moe_block"]
+    c_moe = caches["moe"] if caches is not None else None
+    h, nc = attention_apply(
+        mb["attn"],
+        rmsnorm(mb["ln_attn"], x, cfg.norm_eps),
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        impl=cfg.attention_impl,
+        pos_type=cfg.pos_type,
+        rope_theta=cfg.rope_theta,
+        positions=positions,
+        cache=c_moe,
+        causal_scheduling=cfg.causal_scheduling,
+        mesh_axes=cfg.mesh_axes if cfg.shard_attn_activations else (),
+        from_zero=from_zero,
+    )
+    x = x + h
+    x = x + moe_apply(
+        mb["moe"], rmsnorm(mb["ln_mlp"], x, cfg.norm_eps), top_k=cfg.top_k,
+        capacity_factor=cfg.capacity_factor,
+        mesh_axes=cfg.mesh_axes if cfg.shard_attn_activations else (),
+    )
+    if caches is not None:
+        new_caches["moe"] = nc
+    return x, (new_caches if caches is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# Zamba2-style hybrid group: attn_every mamba blocks + weight-shared attention
+
+
+def zamba_shared_init(key, cfg) -> Params:
+    ka, km, kp = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "ln_in": rmsnorm_init(2 * cfg.d_model, dtype),
+        "in_proj": (jax.random.normal(kp, (2 * cfg.d_model, cfg.d_model), dtype=jnp.float32) / jnp.sqrt(2.0 * cfg.d_model)).astype(dtype),
+        "attn": attention_init(
+            ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, cfg.qkv_bias, dtype
+        ),
+        "ln_mlp": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": swiglu_init(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def zamba_group_init(key, cfg) -> Params:
+    keys = jax.random.split(key, cfg.attn_every)
+    blocks = [mamba2_init(k, cfg) for k in keys]
+    return {"mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)}
+
+
+def zamba_group_apply(params: Params, shared: Params, x, embed0, cfg, caches=None, positions=None, from_zero=False):
+    """One group: shared attention block (fed concat(x, embed0)) then
+    attn_every mamba blocks.  caches: {"attn": kv cache, "mamba": stacked}."""
+    c_attn = caches["attn"] if caches is not None else None
+    concat = jnp.concatenate([x, embed0], axis=-1)
+    h = rmsnorm(shared["ln_in"], concat, cfg.norm_eps) @ shared["in_proj"]
+    a, new_attn = attention_apply(
+        shared["attn"],
+        h,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        impl=cfg.attention_impl,
+        pos_type=cfg.pos_type,
+        rope_theta=cfg.rope_theta,
+        positions=positions,
+        cache=c_attn,
+        causal_scheduling=cfg.causal_scheduling,
+        mesh_axes=cfg.mesh_axes if cfg.shard_attn_activations else (),
+        from_zero=from_zero,
+    )
+    x = x + a
+    x = x + swiglu(shared["mlp"], rmsnorm(shared["ln_mlp"], x, cfg.norm_eps))
+
+    new_mamba = []
+    for i in range(cfg.attn_every):
+        p_i = jax.tree.map(lambda t: t[i], params["mamba"])
+        c_i = (
+            jax.tree.map(lambda t: t[i], caches["mamba"]) if caches is not None else None
+        )
+        out, nc = mamba2_apply(p_i, x, cfg, cache=c_i)
+        x = x + out
+        new_mamba.append(nc)
+    new_caches = None
+    if caches is not None:
+        new_caches = {
+            "attn": new_attn,
+            "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *new_mamba),
+        }
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Whisper blocks
+
+
+def encoder_block_init(key, cfg) -> Params:
+    ka, km = jax.random.split(key)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "ln_attn": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attention_init(
+            ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, False, dtype
+        ),
+        "ln_mlp": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": gelu_mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def encoder_block_apply(params: Params, x, cfg):
+    h, _ = attention_apply(
+        params["attn"],
+        rmsnorm(params["ln_attn"], x, cfg.norm_eps),
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        impl=cfg.attention_impl if cfg.attention_impl == "naive" else "naive",
+        causal=False,
+        pos_type="none",
+    )
+    x = x + h
+    x = x + gelu_mlp(params["mlp"], rmsnorm(params["ln_mlp"], x, cfg.norm_eps))
+    return x
+
+
+def decoder_xblock_init(key, cfg) -> Params:
+    ka, kc, km = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "ln_self": rmsnorm_init(cfg.d_model, dtype),
+        "self_attn": attention_init(
+            ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, False, dtype
+        ),
+        "ln_cross": rmsnorm_init(cfg.d_model, dtype),
+        "cross_attn": attention_init(
+            kc, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, False, dtype
+        ),
+        "ln_mlp": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": gelu_mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def decoder_xblock_apply(params: Params, x, enc_kv, cfg, cache=None, positions=None, from_zero=False):
+    """enc_kv: (k, v) precomputed from encoder output for this layer."""
+    h, new_cache = attention_apply(
+        params["self_attn"],
+        rmsnorm(params["ln_self"], x, cfg.norm_eps),
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        impl=cfg.attention_impl,
+        pos_type="none",  # whisper uses learned/sinusoidal absolute positions
+        positions=positions,
+        cache=cache,
+        causal_scheduling=cfg.causal_scheduling,
+        mesh_axes=cfg.mesh_axes if cfg.shard_attn_activations else (),
+        from_zero=from_zero,
+    )
+    x = x + h
+    c, _ = attention_apply(
+        params["cross_attn"],
+        rmsnorm(params["ln_cross"], x, cfg.norm_eps),
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        impl="naive",
+        cross_kv=enc_kv,
+        pos_type="none",
+    )
+    x = x + c
+    x = x + gelu_mlp(params["mlp"], rmsnorm(params["ln_mlp"], x, cfg.norm_eps))
+    return x, new_cache
+
+
+def cross_kv_from_encoder(params: Params, enc_out, cfg):
+    """Precompute per-layer cross K/V from encoder output (prefill-time)."""
+    from repro.models.attention import qkv_slices
+
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    _, wk, wv = qkv_slices(params["cross_attn"], cfg.n_heads, cfg.n_kv_heads, hd)
+    k = (enc_out @ wk).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = (enc_out @ wv).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    return k, v

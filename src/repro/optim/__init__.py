@@ -1,0 +1,6 @@
+"""Optimizers + FFCz-compressed gradient aggregation."""
+
+from repro.optim.adamw import AdamW
+from repro.optim.grad_compress import compress_gradients, compressed_psum
+
+__all__ = ["AdamW", "compress_gradients", "compressed_psum"]

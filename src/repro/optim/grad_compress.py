@@ -1,0 +1,95 @@
+"""FFCz-compressed gradient aggregation (DESIGN.md §3, distributed-opt trick).
+
+Two pieces:
+
+``compress_gradients``  — jit-safe transform applied to the gradient pytree
+inside train_step: per-tensor int-quantization to ``bits`` with error bound
+E = E_rel * ||g||_inf, followed by FFCz blockwise dual-domain correction so
+the *spectrum* of the quantized gradient stays within Delta = Delta_rel *
+max|FFT| of each block.  Semantically this is what each worker sends into the
+compressed all-reduce; keeping it inside the pjit program means GSPMD still
+owns the actual reduction.
+
+``compressed_psum``     — the explicit collective pattern for deployments
+that want the wire-format win too: a shard_map region that quantizes to int32
+codes, psums the *codes* (integer all-reduce = bits on the wire scale with
+``bits``, not 32), and dequantizes + FFCz-corrects the mean.  Exact-sum
+property of integer codes means no quantization-noise accumulation across
+workers beyond the single-quantizer bound.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.blockwise import blockwise_correct
+
+
+def _quantize_dequantize(g: jnp.ndarray, bits: int, E_rel: float):
+    """Uniform symmetric quantizer with bound E = E_rel * max|g| (per tensor)."""
+    g32 = g.astype(jnp.float32)
+    gmax = jnp.max(jnp.abs(g32))
+    E = E_rel * gmax
+    # round-to-nearest on a grid of step 2E/2^bits => |dequant - g| <= E*2^-bits+;
+    # the *bound* we guarantee downstream is E (coarse grid = fewer wire bits)
+    step = jnp.maximum(2.0 * E / (2.0**bits), 1e-30)
+    codes = jnp.rint(g32 / step)
+    return (codes * step).astype(g.dtype), codes, step
+
+
+def compress_gradients(
+    grads: Any,
+    *,
+    bits: int = 8,
+    E_rel: float = 1e-2,
+    Delta_rel: float = 1e-2,
+    block: int = 4096,
+    max_iters: int = 8,
+) -> Any:
+    """Quantize + FFCz-correct every gradient tensor (dual-domain bounded).
+
+    The correction bounds the *error spectrum* of each ``block``-length pencil:
+    spatial |err| <= E and |Re/Im FFT(err)| <= Delta, with
+    E = E_rel * max|g| and Delta = Delta_rel * N_block * E (frequency errors
+    of a length-N pencil live on a N*E scale).
+    """
+
+    def one(g):
+        if g.size < 2:
+            return g
+        gq, _codes, _step = _quantize_dequantize(g, bits, E_rel)
+        err = (gq - g).astype(jnp.float32)
+        gmax = jnp.max(jnp.abs(g.astype(jnp.float32)))
+        E = E_rel * gmax
+        Delta = Delta_rel * block * E
+        corrected = blockwise_correct(err, E, Delta, block=min(block, max(g.size, 2)), max_iters=max_iters)
+        return (g.astype(jnp.float32) + corrected).astype(g.dtype)
+
+    return jax.tree.map(one, grads)
+
+
+def compressed_psum(x: jnp.ndarray, mesh, axis: str = "data", *, bits: int = 8, E_rel: float = 1e-2):
+    """Integer-code all-reduce under shard_map: the explicit collective form.
+
+    x is the local shard of a gradient tensor, replicated-summed over
+    ``axis``.  Codes are psum'd as int32; the result is the dequantized mean.
+    """
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False
+    )
+    def _inner(v):
+        v32 = v.astype(jnp.float32)
+        gmax = jax.lax.pmax(jnp.max(jnp.abs(v32)), axis)
+        step = jnp.maximum(2.0 * E_rel * gmax / (2.0**bits), 1e-30)
+        codes = jnp.rint(v32 / step).astype(jnp.int32)
+        total = jax.lax.psum(codes, axis)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+        return (total.astype(jnp.float32) * step / n).astype(v.dtype)
+
+    return _inner(x)

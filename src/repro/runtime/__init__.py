@@ -1,0 +1,5 @@
+"""Fault-tolerant training runtime."""
+
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+__all__ = ["Trainer", "TrainerConfig"]

@@ -1,0 +1,5 @@
+"""Batched serving engine with FFCz KV-cache compression."""
+
+from repro.serving.engine import ServeConfig, ServingEngine
+
+__all__ = ["ServingEngine", "ServeConfig"]

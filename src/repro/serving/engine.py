@@ -1,0 +1,93 @@
+"""Batched decode engine: continuous batching over a request queue.
+
+Flow per admitted batch: right-align prompts -> prefill (one jitted call) ->
+optional FFCz KV-cache compression -> N greedy decode steps (one jitted call
+each).  Designed so every jitted shape is a function of (batch, max_len)
+only — requests of different lengths share compiled programs via front
+padding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.models.model import build_model
+from repro.serving.kv_compress import compress_cache
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    max_new_tokens: int = 32
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int = 16
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, serve: ServeConfig, params=None, rng_seed: int = 0):
+        self.cfg = cfg
+        self.serve = serve
+        self.bundle = build_model(cfg)
+        self.params = params if params is not None else self.bundle.init(jax.random.PRNGKey(rng_seed))
+        self._prefill = jax.jit(self.bundle.prefill)
+        self._decode = jax.jit(self.bundle.decode)
+        self.queue: List[Request] = []
+        self._uid = 0
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, dtype=np.int32), max_new_tokens))
+        return self._uid
+
+    def _make_batch(self, reqs: List[Request]) -> Dict[str, Any]:
+        """Front-pad prompts to a common length (pad tokens attend causally
+        before every real token, and logits are taken from the last position,
+        so padding affects only wasted compute, not outputs for greedy
+        decoding from the final position)."""
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((len(reqs), plen), dtype=np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt) :] = r.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (len(reqs), self.cfg.vision_tokens, self.cfg.vision_dim), dtype=jnp.float32
+            )
+        if self.cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (len(reqs), self.cfg.encoder_seq, self.cfg.d_model), dtype=jnp.float32
+            )
+        return batch
+
+    def step(self) -> List[Dict[str, Any]]:
+        """Serve one admitted batch from the queue; returns completions."""
+        if not self.queue:
+            return []
+        reqs, self.queue = self.queue[: self.serve.max_batch], self.queue[self.serve.max_batch :]
+        batch = self._make_batch(reqs)
+        n_new = max(r.max_new_tokens for r in reqs)
+        cache = self.bundle.init_cache(len(reqs), batch["tokens"].shape[1] + n_new)
+        logits, cache = self._prefill(self.params, batch, cache)
+        if self.cfg.compression.kv_cache_compression and self.cfg.family != "ssm":
+            cache = compress_cache(cache, self.cfg.compression)
+        outs = [jnp.argmax(logits[:, -1], axis=-1)]
+        for _ in range(n_new - 1):
+            logits, cache = self._decode(self.params, outs[-1][:, None], cache)
+            outs.append(jnp.argmax(logits[:, -1], axis=-1))
+        gen = np.stack([np.asarray(o) for o in outs], axis=1)  # (b, n_new)
+        return [
+            {"uid": r.uid, "tokens": gen[i, : r.max_new_tokens].tolist()}
+            for i, r in enumerate(reqs)
+        ]

@@ -1,0 +1,66 @@
+"""FFCz KV-cache compression (DESIGN.md §3 integration #3).
+
+After prefill, the resident K/V tensors are quantized to ``bits`` and the
+quantization error is FFCz-corrected blockwise along the sequence dimension:
+spatial bound E keeps each cached activation within E of the exact value;
+the frequency bound keeps the *spectrum over positions* — the structure
+attention scores integrate over — within Delta.  The engine stores the
+quantize+correct round-trip (memory model: codes at ``bits``/value + sparse
+edits); tests verify both bounds and end-to-end logit drift.
+
+Inapplicable to attention-free archs (mamba2: no KV cache; SSM state is tiny
+and kept exact) — noted in DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockwise import blockwise_correct
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "max_iters"))
+def compress_kv_tensor(
+    kv: jnp.ndarray,  # (b, hkv, S, hd)
+    *,
+    bits: int = 8,
+    E_rel: float = 1e-2,
+    Delta_rel: float = 1e-2,
+    block: int = 1024,
+    max_iters: int = 8,
+) -> jnp.ndarray:
+    """Quantize + FFCz-correct a KV tensor; returns the lossy round-trip."""
+    x = kv.astype(jnp.float32)
+    # blocks along the sequence dim: (b, hkv, S, hd) -> pencils over S
+    xt = jnp.swapaxes(x, 2, 3)  # (b, hkv, hd, S)
+    amax = jnp.max(jnp.abs(xt))
+    E = E_rel * jnp.maximum(amax, 1e-30)
+    step = 2.0 * E / (2.0**bits)
+    q = jnp.rint(xt / step) * step
+    err = q - xt
+    Delta = Delta_rel * block * E
+    corrected_err = blockwise_correct(err, E, Delta, block=block, max_iters=max_iters)
+    out = jnp.swapaxes(xt + corrected_err, 2, 3)
+    return out.astype(kv.dtype)
+
+
+def compress_cache(cache: Any, comp) -> Any:
+    """Apply KV compression to every k/v leaf of a cache pytree."""
+
+    def visit(path, leaf):
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        if names and names[-1] in ("k", "v") and leaf.ndim >= 4:
+            flat = leaf.reshape((-1,) + leaf.shape[-4:]) if leaf.ndim > 4 else leaf[None]
+            out = jax.vmap(
+                lambda t: compress_kv_tensor(
+                    t, bits=8, E_rel=comp.kv_E_rel, Delta_rel=comp.kv_Delta_rel
+                )
+            )(flat)
+            return out.reshape(leaf.shape)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, cache)

@@ -1,0 +1,5 @@
+"""Partition rules: DP/TP/EP/SP/FSDP over the production mesh."""
+
+from repro.sharding.rules import batch_pspec, cache_pspecs, param_pspecs, to_shardings
+
+__all__ = ["param_pspecs", "cache_pspecs", "batch_pspec", "to_shardings"]

@@ -1,0 +1,97 @@
+"""GPipe-style pipeline parallelism over a mesh axis (DESIGN.md §7, optional).
+
+The multi-pod dry-run uses the "pod" axis as outer DP/FSDP by default; this
+module provides the alternative: split the layer stack into S stages along a
+mesh axis and stream M microbatches through the classic GPipe schedule
+(T = M + S - 1 ticks, bubble fraction (S-1)/T), with inter-stage transfers as
+``jax.lax.ppermute`` inside a ``shard_map`` that is manual over the pipeline
+axis only (other axes keep their GSPMD sharding).
+
+API is deliberately minimal and composable: the user supplies ``stage_fn``
+(params-slice, activations) -> activations — typically a lax.scan over the
+stage's layer group — and stacked per-stage params.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(
+    stage_fn: Callable,
+    stage_params,
+    microbatches: jnp.ndarray,  # (M, mb, ...) microbatch-major inputs
+    mesh,
+    axis: str = "pipe",
+):
+    """Run ``y_m = stage_{S-1}(...stage_0(x_m))`` for every microbatch m with
+    the GPipe schedule.  ``stage_params`` leaves must have a leading axis of
+    size S (the pipeline axis); returns outputs shaped like ``microbatches``.
+    """
+    n_stages = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    M = microbatches.shape[0]
+    T = M + n_stages - 1
+
+    def per_stage(params_local, mbs):
+        # params_local: this stage's slice — shard_map leaves a size-1
+        # leading stage axis; strip it
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        # mbs: full (M, mb, ...) input block (replicated across stages)
+        idx = jax.lax.axis_index(axis)
+        mb_shape = mbs.shape[1:]
+        buf0 = jnp.zeros((M,) + mb_shape, mbs.dtype)  # last stage's outputs
+
+        def tick(carry, t):
+            recv, outbuf = carry
+            # stage 0 feeds from the microbatch stream at time t
+            mb_idx = jnp.clip(t, 0, M - 1)
+            x_in = jnp.where(idx == 0, mbs[mb_idx], recv)
+            y = stage_fn(params_local, x_in)
+            # valid iff this stage is processing a real microbatch: 0 <= t - idx < M
+            m_of_t = t - idx
+            valid = jnp.logical_and(m_of_t >= 0, m_of_t < M)
+            # last stage records its finished microbatch
+            outbuf = jax.lax.cond(
+                jnp.logical_and(valid, idx == n_stages - 1),
+                lambda b: jax.lax.dynamic_update_index_in_dim(
+                    b, y.astype(b.dtype), jnp.clip(m_of_t, 0, M - 1), 0
+                ),
+                lambda b: b,
+                outbuf,
+            )
+            # ship activations downstream (stage i -> i+1); wrap-around to 0
+            # is ignored (stage 0 always takes from the stream)
+            sent = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            )
+            return (sent, outbuf), None
+
+        recv0 = jnp.zeros(mb_shape, mbs.dtype)
+        (_, outbuf), _ = jax.lax.scan(tick, (recv0, buf0), jnp.arange(T))
+        return outbuf[None]  # leading stage axis for the P(axis) out_spec
+
+    spec_params = jax.tree.map(lambda _: P(axis), stage_params)
+    fn = jax.shard_map(
+        per_stage,
+        mesh=mesh,
+        in_specs=(spec_params, P()),
+        out_specs=P(axis),  # (S, M, mb, ...): stage-major stack
+        check_vma=False,
+    )
+    stacked = fn(stage_params, microbatches)
+    return stacked[-1]  # only the last stage's buffer holds real outputs
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    """GPipe bubble overhead: (S-1) / (M + S - 1)."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+@functools.lru_cache(maxsize=None)
+def _noop():  # pragma: no cover
+    return None

@@ -1,0 +1,11 @@
+# NOTE: deliberately no XLA_FLAGS here — smoke tests and benches must see the
+# real single CPU device.  Multi-device distribution tests run in a
+# subprocess that sets xla_force_host_platform_device_count itself
+# (tests/test_distributed.py).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

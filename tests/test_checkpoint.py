@@ -1,0 +1,91 @@
+"""Checkpoint manager: atomicity, retention, restore, FFCz codec."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.codec import CheckpointCodec
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w": jax.random.normal(k, (64, 32)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32), "s": jnp.float32(3.5)},
+    }
+
+
+class TestManager:
+    def test_save_restore_exact(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        st = _state()
+        mgr.save(3, st)
+        got = mgr.restore(3, jax.eval_shape(lambda: st))
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_and_retention(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, _state(s))
+        assert mgr.latest_step() == 4
+        assert mgr.committed_steps() == [3, 4]  # older GC'd
+
+    def test_uncommitted_dir_ignored(self, tmp_path):
+        """A crash mid-save (no _COMMITTED) must be invisible to restore."""
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+        fake = tmp_path / "step_000000000009"
+        fake.mkdir()
+        (fake / "manifest.json").write_text("{}")
+        assert mgr.latest_step() == 1
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(7, _state(), blocking=False)
+        mgr.wait()
+        assert mgr.latest_step() == 7
+
+    def test_restore_empty_is_none(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        assert mgr.restore_latest(_state()) is None
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, {"w": jnp.zeros((4, 4))})
+        with pytest.raises(ValueError):
+            mgr.restore(1, {"w": jnp.zeros((5, 4))})
+
+
+class TestCodec:
+    def test_ffcz_codec_bounds(self, rng):
+        codec = CheckpointCodec(enabled=True, E_rel=1e-4, Delta_rel=1e-4)
+        w = rng.standard_normal((128, 64)).astype(np.float32)
+        back = codec.decode(codec.encode(w))
+        assert np.abs(back - w).max() <= 1e-4 * np.ptp(w) * (1 + 1e-5)
+
+    def test_ffcz_codec_compresses_smooth(self):
+        from repro.data.fields import make_field
+
+        codec = CheckpointCodec(enabled=True, E_rel=1e-3, Delta_rel=1e-3)
+        w = make_field("s3d-like").reshape(64, -1)
+        assert len(codec.encode(w)) < w.nbytes / 2
+
+    def test_small_and_int_passthrough(self):
+        codec = CheckpointCodec(enabled=True)
+        for arr in (np.arange(10), np.float32([1.5]), np.zeros((3, 3), np.int64)):
+            back = codec.decode(codec.encode(arr))
+            np.testing.assert_array_equal(back, arr)
+
+    def test_manager_with_codec_roundtrip(self, tmp_path, rng):
+        codec = CheckpointCodec(enabled=True, E_rel=1e-5, Delta_rel=1e-5)
+        mgr = CheckpointManager(str(tmp_path), codec=codec)
+        st = {"w": jnp.asarray(rng.standard_normal((128, 128)), dtype=jnp.float32)}
+        mgr.save(1, st)
+        got = mgr.restore(1, jax.eval_shape(lambda: st))
+        err = np.abs(np.asarray(got["w"]) - np.asarray(st["w"])).max()
+        assert err <= 1e-5 * np.ptp(np.asarray(st["w"])) * (1 + 1e-5)

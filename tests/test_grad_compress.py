@@ -1,0 +1,39 @@
+"""FFCz gradient compression: error bounds + learning signal preservation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.grad_compress import compress_gradients
+
+
+class TestGradCompression:
+    def test_spatial_bound(self, rng):
+        g = {"w": jnp.asarray(rng.standard_normal((512, 16)), dtype=jnp.float32)}
+        out = compress_gradients(g, bits=8, E_rel=1e-2, Delta_rel=1e-1, block=1024)
+        err = np.asarray(out["w"] - g["w"], dtype=np.float64)
+        E = 1e-2 * np.abs(np.asarray(g["w"])).max()
+        assert np.abs(err).max() <= E * 1.001
+
+    def test_frequency_bound_per_block(self, rng):
+        g = {"w": jnp.asarray(rng.standard_normal(2048), dtype=jnp.float32)}
+        block = 512
+        out = compress_gradients(g, bits=6, E_rel=5e-2, Delta_rel=1e-2, block=block, max_iters=30)
+        err = np.asarray(out["w"] - g["w"], dtype=np.float64).reshape(-1, block)
+        d = np.fft.fft(err, axis=-1)
+        E = 5e-2 * np.abs(np.asarray(g["w"])).max()
+        Delta = 1e-2 * block * E
+        assert max(np.abs(d.real).max(), np.abs(d.imag).max()) <= Delta * 1.02
+
+    def test_direction_preserved(self, rng):
+        """Compressed gradient must stay well-aligned with the original."""
+        g = {"w": jnp.asarray(rng.standard_normal(4096), dtype=jnp.float32)}
+        out = compress_gradients(g, bits=8, E_rel=1e-2, Delta_rel=1e-1)
+        a, b = np.asarray(g["w"]), np.asarray(out["w"])
+        cos = a @ b / (np.linalg.norm(a) * np.linalg.norm(b))
+        assert cos > 0.999
+
+    def test_tiny_leaves_passthrough(self):
+        g = {"scalar": jnp.float32(2.0)}
+        out = compress_gradients(g)
+        assert float(out["scalar"]) == 2.0

@@ -1,0 +1,70 @@
+"""Trip-count-aware HLO cost analyzer (the roofline's measurement tool)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def _flops(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return analyze_hlo(c.as_text())
+
+
+class TestHloCost:
+    def test_scan_trip_count_multiplied(self):
+        """XLA's cost_analysis counts a scan body once; ours multiplies."""
+        x = jnp.zeros((128, 128))
+        w = jnp.zeros((128, 128))
+
+        def f(x, w):
+            def body(c, _):
+                return c @ w, None
+
+            c, _ = jax.lax.scan(body, x, None, length=10)
+            return c
+
+        cost = _flops(f, x, w)
+        expect = 10 * 2 * 128**3
+        assert 0.95 * expect < cost.flops < 1.1 * expect, cost.flops
+
+    def test_nested_scan(self):
+        x = jnp.zeros((64, 64))
+        w = jnp.zeros((64, 64))
+
+        def f(x, w):
+            def outer(c, _):
+                def inner(d, _):
+                    return d @ w, None
+
+                d, _ = jax.lax.scan(inner, c, None, length=5)
+                return d, None
+
+            c, _ = jax.lax.scan(outer, x, None, length=4)
+            return c
+
+        cost = _flops(f, x, w)
+        expect = 20 * 2 * 64**3
+        assert 0.9 * expect < cost.flops < 1.2 * expect
+
+    def test_fft_flops_counted(self):
+        cost = _flops(lambda v: jnp.fft.fft(v), jnp.zeros(4096, jnp.complex64))
+        expect = 5 * 4096 * np.log2(4096)
+        assert 0.9 * expect < cost.flops < 1.5 * expect
+
+    def test_dynamic_while_flagged(self):
+        def f(n):
+            def body(c):
+                i, v = c
+                return (i + 1, v * 1.5)
+
+            return jax.lax.while_loop(lambda c: c[0] < n, body, (0, 1.0))
+
+        cost = _flops(f, jnp.int32(7))
+        assert cost.unknown_trips >= 1
+
+    def test_collective_attribution_keys(self):
+        # single-device module: no collectives, attribution empty
+        cost = _flops(lambda a, b: a @ b, jnp.zeros((32, 32)), jnp.zeros((32, 32)))
+        assert cost.collectives == {} and cost.coll_by_name == {}

@@ -1,0 +1,108 @@
+"""Pallas kernel sweeps: shapes x dtypes against the pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.block_transform.ops import block_transform_quantize
+from repro.kernels.block_transform.ref import block_transform_quantize_ref
+from repro.kernels.fcube.ops import project_fcube_fused
+from repro.kernels.fcube.ref import project_fcube_fused_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quantize.ops import quantize_edits
+from repro.kernels.quantize.ref import quantize_edits_ref
+from repro.kernels.scube.ops import project_scube_fused
+from repro.kernels.scube.ref import project_scube_fused_ref
+
+SHAPES = [(64,), (100,), (256, 128), (33, 17, 5)]
+
+
+class TestFCubeKernel:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("pointwise", [False, True])
+    def test_matches_ref(self, shape, pointwise, rng):
+        d = (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(np.complex64)
+        Delta = (np.abs(d.real) * 0.8 + 0.05).astype(np.float32) if pointwise else np.float32(0.7)
+        c1, e1, v1 = project_fcube_fused(jnp.asarray(d), jnp.asarray(Delta))
+        c2, e2, v2 = project_fcube_fused_ref(jnp.asarray(d), jnp.asarray(Delta))
+        np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-6, atol=1e-7)
+        assert int(v1) == int(v2)
+
+
+class TestSCubeKernel:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64])
+    def test_matches_ref(self, shape, dtype, rng):
+        x = rng.standard_normal(shape).astype(dtype)
+        c1, e1 = project_scube_fused(jnp.asarray(x), 0.4)
+        c2, e2 = project_scube_fused_ref(jnp.asarray(x), 0.4)
+        np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-6, atol=1e-7)
+
+    def test_pointwise_E(self, rng):
+        x = rng.standard_normal(300).astype(np.float32)
+        E = (np.abs(rng.standard_normal(300)) * 0.3 + 0.05).astype(np.float32)
+        c1, e1 = project_scube_fused(jnp.asarray(x), jnp.asarray(E))
+        c2, e2 = project_scube_fused_ref(jnp.asarray(x), jnp.asarray(E))
+        np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-6)
+
+
+class TestQuantizeKernel:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("m", [8, 16])
+    def test_matches_ref(self, shape, m, rng):
+        v = rng.standard_normal(shape).astype(np.float32)
+        c1, f1 = quantize_edits(jnp.asarray(v), 0.5, m=m)
+        c2, f2 = quantize_edits_ref(jnp.asarray(v), 0.5, m=m)
+        assert np.array_equal(np.asarray(c1), np.asarray(c2))
+        assert np.array_equal(np.asarray(f1), np.asarray(f2))
+
+
+class TestBlockTransformKernel:
+    @pytest.mark.parametrize("nb", [1, 64, 777])
+    @pytest.mark.parametrize("B", [64, 128])
+    def test_matches_ref(self, nb, B, rng):
+        blocks = rng.standard_normal((nb, B)).astype(np.float32)
+        mat = np.linalg.qr(rng.standard_normal((B, B)))[0].astype(np.float32)
+        c1 = block_transform_quantize(jnp.asarray(blocks), jnp.asarray(mat), 0.01)
+        c2 = block_transform_quantize_ref(jnp.asarray(blocks), jnp.asarray(mat), 0.01)
+        diff = np.abs(np.asarray(c1) - np.asarray(c2))
+        assert (diff <= 1).all() and (diff > 0).mean() < 1e-3  # fp32 rint ties
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize(
+        "b,hq,hkv,sq,sk,d",
+        [
+            (2, 4, 2, 128, 128, 64),
+            (1, 2, 1, 256, 256, 128),
+            (1, 4, 4, 1, 384, 64),  # decode
+            (2, 8, 2, 100, 100, 64),  # unaligned
+            (1, 2, 1, 100, 260, 64),  # suffix queries
+            (1, 14, 2, 64, 512, 64),  # qwen-ish GQA
+        ],
+    )
+    def test_matches_ref(self, b, hq, hkv, sq, sk, d, rng):
+        q = rng.standard_normal((b, hq, sq, d)).astype(np.float32) * 0.5
+        k = rng.standard_normal((b, hkv, sk, d)).astype(np.float32) * 0.5
+        v = rng.standard_normal((b, hkv, sk, d)).astype(np.float32)
+        o1 = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), block_q=128, block_k=128)
+        o2 = attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-5)
+
+    def test_bf16(self, rng):
+        q = jnp.asarray(rng.standard_normal((1, 4, 128, 64)), dtype=jnp.bfloat16)
+        k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), dtype=jnp.bfloat16)
+        v = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), dtype=jnp.bfloat16)
+        o1 = flash_attention(q, k, v)
+        o2 = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+        assert np.abs(np.asarray(o1, dtype=np.float32) - np.asarray(o2)).max() < 0.03
+
+    def test_rejects_sq_gt_sk(self, rng):
+        q = jnp.zeros((1, 2, 16, 32))
+        k = jnp.zeros((1, 2, 8, 32))
+        with pytest.raises(ValueError):
+            flash_attention(q, k, k)

@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs (assignment requirement), plus decode paths."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, get_smoke_config
+from repro.models.model import build_model
+from repro.optim.adamw import AdamW
+
+
+def _batch_for(cfg, b=2, s=32, seed=1):
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(seed), (b, s), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (b, cfg.vision_tokens, cfg.vision_dim)
+        )
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 2), (b, cfg.encoder_seq, cfg.d_model)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_and_train_step(self, arch):
+        cfg = get_smoke_config(arch)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = _batch_for(cfg)
+        opt = AdamW(warmup_steps=2)
+        state = opt.init(params)
+
+        @jax.jit
+        def step(p, s, b):
+            loss, grads = jax.value_and_grad(m.loss)(p, b)
+            p, s = opt.update(grads, s, p)
+            return p, s, loss
+
+        params, state, loss = step(params, state, batch)
+        assert np.isfinite(float(loss)), arch
+        for leaf in jax.tree.leaves(params):
+            assert np.isfinite(np.asarray(leaf, dtype=np.float32)).all(), arch
+
+    def test_prefill_decode_shapes(self, arch):
+        cfg = get_smoke_config(arch)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        b, s = 2, 16
+        batch = _batch_for(cfg, b=b, s=s)
+        cache = m.init_cache(b, 48)
+        logits, cache = m.prefill(params, batch, cache)
+        assert logits.shape == (b, 1, cfg.vocab_padded), arch
+        assert np.isfinite(np.asarray(logits, dtype=np.float32)).all(), arch
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        assert int(tok.max()) < cfg.vocab, "padded vocab ids must be masked"
+        logits2, cache = m.decode(params, tok, cache)
+        assert logits2.shape == (b, 1, cfg.vocab_padded), arch
+        assert np.isfinite(np.asarray(logits2, dtype=np.float32)).all(), arch
+
+
+class TestDecodeMatchesTeacherForcing:
+    @pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-2.7b", "zamba2-7b"])
+    def test_incremental_equals_full(self, arch):
+        """Prefill+decode logits must match full-sequence forward logits."""
+        cfg = dataclasses.replace(get_smoke_config(arch), attention_impl="naive")
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        b, s = 1, 12
+        toks = jax.random.randint(jax.random.PRNGKey(5), (b, s), 0, cfg.vocab)
+
+        # full forward via prefill over the whole sequence (cache len == s)
+        cache = m.init_cache(b, s)
+        full_logits, _ = m.prefill(params, {"tokens": toks}, cache)
+
+        # chunked: prefill s-1 then decode the last token
+        cache2 = m.init_cache(b, s)
+        _, cache2 = m.prefill(params, {"tokens": toks[:, : s - 1]}, cache2)
+        step_logits, _ = m.decode(params, toks[:, s - 1 :], cache2)
+        np.testing.assert_allclose(
+            np.asarray(full_logits[:, -1], dtype=np.float32),
+            np.asarray(step_logits[:, -1], dtype=np.float32),
+            atol=2e-2, rtol=1e-2,
+        )
+
+
+class TestFullConfigsInstantiable:
+    """FULL configs are exercised via the dry-run (abstract only) — here we
+    just check config invariants hold for every published entry."""
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_config_sanity(self, arch):
+        cfg = get_config(arch)
+        assert cfg.name == arch
+        assert cfg.vocab_padded % 128 == 0 and cfg.vocab_padded >= cfg.vocab
+        if cfg.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+            assert cfg.n_heads % cfg.n_kv_heads == 0
+        if cfg.family == "moe":
+            assert 0 < cfg.top_k <= cfg.n_experts
+            assert cfg.n_layers % cfg.moe_every == 0
+        if cfg.family in ("ssm", "hybrid"):
+            assert cfg.d_inner % cfg.ssm_headdim == 0
+        cells = cfg.cells()
+        assert ("long_500k" in cells) == (cfg.family in ("ssm", "hybrid"))
+        for c in cells:
+            assert c in SHAPES
+
+    def test_param_count_llama4(self):
+        """llama4-maverick should land near 400B total."""
+        cfg = get_config("llama4-maverick-400b-a17b")
+        m = build_model(cfg)
+        tree = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+        assert 3.5e11 < n < 4.6e11, n
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_abstract_init(self, arch):
+        """Full config param tree builds abstractly (no allocation).."""
+        cfg = get_config(arch)
+        m = build_model(cfg)
+        tree = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+        # every full model is at least 10M params (whisper-tiny is 39M)
+        assert n > 1e7, (arch, n)

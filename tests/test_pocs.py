@@ -1,0 +1,110 @@
+"""Alternating-projection invariants (paper Alg. 1 / §III), incl. property tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cubes import fcube_violations, project_fcube, project_scube
+from repro.core.pocs import alternating_projection
+
+
+def _feasible(eps, E, Delta, tol=1e-3):
+    eps = np.asarray(eps, dtype=np.float64)
+    d = np.fft.fftn(eps)
+    ok_s = np.all(np.abs(eps) <= np.asarray(E) * (1 + tol))
+    ok_f = np.all(np.maximum(np.abs(d.real), np.abs(d.imag)) <= np.asarray(Delta) * (1 + tol))
+    return ok_s and ok_f
+
+
+class TestProjections:
+    def test_scube_is_projection(self, rng):
+        x = jnp.asarray(rng.standard_normal(100), dtype=jnp.float32)
+        c, disp = project_scube(x, 0.5)
+        assert np.abs(np.asarray(c)).max() <= 0.5
+        assert np.allclose(np.asarray(c), np.asarray(x) + np.asarray(disp))
+        # idempotent
+        c2, d2 = project_scube(c, 0.5)
+        assert np.allclose(c2, c) and np.abs(np.asarray(d2)).max() == 0
+
+    def test_fcube_preserves_hermitian(self, rng):
+        """Clipping Re/Im with a symmetric bound keeps IFFT real (paper §IV-D)."""
+        eps = rng.standard_normal((16, 16)).astype(np.float32)
+        d = jnp.asarray(np.fft.fftn(eps))
+        clipped, _ = project_fcube(d, 0.5)
+        back = np.fft.ifftn(np.asarray(clipped))
+        assert np.abs(back.imag).max() < 1e-5
+
+    def test_fcube_exact_euclidean_projection(self, rng):
+        """FFT->clip->IFFT is the exact projection because the DFT rows are
+        orthogonal: verify the displacement is orthogonal to the face."""
+        eps = rng.standard_normal(32).astype(np.float64)
+        d = np.fft.fft(eps)
+        Delta = 0.5 * max(np.abs(d.real).max(), np.abs(d.imag).max())
+        clipped = np.clip(d.real, -Delta, Delta) + 1j * np.clip(d.imag, -Delta, Delta)
+        proj = np.fft.ifft(clipped).real
+        # projection property: ||eps - proj||^2 + ||proj - y||^2 <= ||eps - y||^2
+        # for any y in the f-cube; test with y = 0 (always feasible)
+        assert np.sum((eps - proj) ** 2) + np.sum(proj**2) <= np.sum(eps**2) + 1e-9
+
+
+class TestAlternatingProjection:
+    def test_terminates_inside_both_cubes(self, rng):
+        E = 0.1
+        eps0 = np.clip(rng.standard_normal((32, 32)) * 0.05, -E, E).astype(np.float32)
+        Delta = 0.4 * np.abs(np.fft.fftn(eps0)).max()
+        res = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=500)
+        assert bool(res.converged)
+        assert _feasible(res.eps, E, Delta)
+
+    def test_edit_identity(self, rng):
+        """eps_final == eps0 + IFFT(freq_edits) + spat_edits (decoder contract)."""
+        E = 0.1
+        eps0 = np.clip(rng.standard_normal(512) * 0.05, -E, E).astype(np.float32)
+        Delta = 0.5 * np.abs(np.fft.fft(eps0)).max()
+        res = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=500)
+        recon = eps0 + np.fft.ifft(np.asarray(res.freq_edits)).real + np.asarray(res.spat_edits)
+        assert np.abs(recon - np.asarray(res.eps)).max() < 1e-4
+
+    def test_inside_fcube_one_iteration(self, rng):
+        """Huge Delta => already feasible => 1 iteration, zero edits (Table III)."""
+        eps0 = (rng.standard_normal(64) * 0.01).astype(np.float32)
+        res = alternating_projection(jnp.asarray(eps0), 0.1, 1e9, max_iters=100)
+        assert int(res.iterations) == 1
+        assert np.abs(np.asarray(res.spat_edits)).max() == 0
+        assert np.abs(np.asarray(res.freq_edits)).max() == 0
+
+    def test_kernel_path_matches(self, rng):
+        E = 0.1
+        eps0 = np.clip(rng.standard_normal((24, 24)) * 0.05, -E, E).astype(np.float32)
+        Delta = 0.5 * np.abs(np.fft.fftn(eps0)).max()
+        r1 = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=300, use_kernels=False)
+        r2 = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=300, use_kernels=True)
+        assert int(r1.iterations) == int(r2.iterations)
+        assert np.allclose(np.asarray(r1.eps), np.asarray(r2.eps), atol=1e-6)
+
+    def test_pointwise_delta(self, rng):
+        E = 0.1
+        eps0 = np.clip(rng.standard_normal(256) * 0.05, -E, E).astype(np.float32)
+        d0 = np.abs(np.fft.fft(eps0))
+        Delta = np.maximum(0.5 * d0, 0.1 * d0.max()).astype(np.float32)
+        res = alternating_projection(jnp.asarray(eps0), E, jnp.asarray(Delta), max_iters=1000)
+        assert _feasible(res.eps, E, Delta)
+
+    @given(st.integers(0, 10_000), st.floats(0.2, 0.95))
+    @settings(max_examples=25, deadline=None)
+    def test_feasibility_property(self, seed, frac):
+        """For any start inside the s-cube and Delta = frac * max|FFT|, POCS
+        lands in the intersection (0 is always in both cubes => nonempty)."""
+        rng = np.random.default_rng(seed)
+        E = 0.1
+        eps0 = np.clip(rng.standard_normal(128) * 0.07, -E, E).astype(np.float32)
+        Delta = max(frac * np.abs(np.fft.fft(eps0)).max(), 1e-6)
+        res = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=2000)
+        assert _feasible(res.eps, E, Delta, tol=1e-2)
+
+    def test_violations_counter(self, rng):
+        d = jnp.asarray((rng.standard_normal(64) + 1j * rng.standard_normal(64)).astype(np.complex64))
+        v = fcube_violations(d, 0.5)
+        expected = np.sum((np.abs(np.asarray(d).real) > 0.5) | (np.abs(np.asarray(d).imag) > 0.5))
+        assert int(v) == int(expected)

@@ -1,0 +1,47 @@
+"""Over-relaxed POCS (§Perf FFCz-iter F2): same guarantees, fewer iterations."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pocs import alternating_projection
+
+
+def _feasible(eps, E, Delta, tol=1e-3):
+    eps = np.asarray(eps, dtype=np.float64)
+    d = np.fft.fftn(eps)
+    return np.all(np.abs(eps) <= np.asarray(E) * (1 + tol)) and np.all(
+        np.maximum(np.abs(d.real), np.abs(d.imag)) <= np.asarray(Delta) * (1 + tol)
+    )
+
+
+class TestRelaxedPOCS:
+    @pytest.mark.parametrize("relax", [1.0, 1.3, 1.6])
+    def test_feasibility_preserved(self, relax, rng):
+        E = 0.1
+        eps0 = np.clip(rng.standard_normal((32, 32)) * 0.06, -E, E).astype(np.float32)
+        Delta = 0.4 * np.abs(np.fft.fftn(eps0)).max()
+        res = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=1000, relax=relax)
+        assert bool(res.converged)
+        assert _feasible(res.eps, E, Delta)
+
+    def test_relax_reduces_iterations_hard_case(self, rng):
+        """Pointwise near-tangential bounds: the regime the paper flags as
+        slow; over-relaxation must not be slower and typically collapses the
+        count by orders of magnitude."""
+        E = 0.01
+        eps0 = np.clip(rng.standard_normal(4096) * 0.006, -E, E).astype(np.float32)
+        d0 = np.abs(np.fft.fft(eps0))
+        Delta = np.maximum(0.3 * d0, 0.02 * d0.max()).astype(np.float32)
+        r_plain = alternating_projection(jnp.asarray(eps0), E, jnp.asarray(Delta), max_iters=800, relax=1.0)
+        r_relax = alternating_projection(jnp.asarray(eps0), E, jnp.asarray(Delta), max_iters=800, relax=1.3)
+        assert _feasible(r_relax.eps, E, Delta, tol=1e-2)
+        assert int(r_relax.iterations) <= int(r_plain.iterations)
+
+    def test_edit_identity_still_holds(self, rng):
+        E = 0.1
+        eps0 = np.clip(rng.standard_normal(256) * 0.05, -E, E).astype(np.float32)
+        Delta = 0.5 * np.abs(np.fft.fft(eps0)).max()
+        res = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=500, relax=1.3)
+        recon = eps0 + np.fft.ifft(np.asarray(res.freq_edits)).real + np.asarray(res.spat_edits)
+        assert np.abs(recon - np.asarray(res.eps)).max() < 1e-4

@@ -1,0 +1,90 @@
+"""Serving engine + FFCz KV-cache compression."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CompressionConfig, get_smoke_config
+from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving.kv_compress import compress_cache, compress_kv_tensor
+
+
+class TestEngine:
+    def test_batched_completion(self):
+        cfg = get_smoke_config("qwen2-0.5b")
+        eng = ServingEngine(cfg, ServeConfig(max_batch=4))
+        uids = [eng.submit(np.arange(4 + i) % cfg.vocab, max_new_tokens=5) for i in range(3)]
+        res = eng.step()
+        assert sorted(r["uid"] for r in res) == sorted(uids)
+        assert all(len(r["tokens"]) == 5 for r in res)
+        assert all(0 <= t < cfg.vocab for r in res for t in r["tokens"])
+
+    def test_queue_overflow_spills(self):
+        cfg = get_smoke_config("qwen2-0.5b")
+        eng = ServingEngine(cfg, ServeConfig(max_batch=2))
+        for i in range(5):
+            eng.submit(np.arange(4), max_new_tokens=2)
+        assert len(eng.step()) == 2
+        assert len(eng.queue) == 3
+
+    def test_greedy_determinism(self):
+        cfg = get_smoke_config("qwen2-0.5b")
+        eng = ServingEngine(cfg, ServeConfig(max_batch=1))
+        eng.submit(np.arange(8), max_new_tokens=6)
+        a = eng.step()[0]["tokens"]
+        eng.submit(np.arange(8), max_new_tokens=6)
+        b = eng.step()[0]["tokens"]
+        assert a == b
+
+
+class TestKVCompression:
+    def test_dual_bounds(self, rng):
+        kv = jnp.asarray(rng.standard_normal((2, 2, 256, 16)), dtype=jnp.float32)
+        out = compress_kv_tensor(kv, bits=8, E_rel=1e-2, Delta_rel=1e-2, block=256)
+        err = np.asarray(out - kv, dtype=np.float64)
+        E = 1e-2 * np.abs(np.asarray(kv)).max()
+        assert np.abs(err).max() <= E * 1.001
+        # frequency bound along the sequence dim per pencil
+        errt = np.swapaxes(err, 2, 3).reshape(-1, 256)
+        d = np.fft.fft(errt, axis=-1)
+        Delta = 1e-2 * 256 * E
+        assert max(np.abs(d.real).max(), np.abs(d.imag).max()) <= Delta * 1.01
+
+    def test_compress_cache_tree(self, rng):
+        cache = {
+            "k": jnp.asarray(rng.standard_normal((3, 2, 2, 64, 16)), dtype=jnp.float32),
+            "v": jnp.asarray(rng.standard_normal((3, 2, 2, 64, 16)), dtype=jnp.float32),
+            "pos": jnp.int32(64),
+        }
+        comp = CompressionConfig(kv_cache_compression=True, kv_E_rel=1e-2, kv_Delta_rel=1e-2)
+        out = compress_cache(cache, comp)
+        assert int(out["pos"]) == 64  # untouched
+        assert not np.array_equal(np.asarray(out["k"]), np.asarray(cache["k"]))  # lossy
+        E = 1e-2 * np.abs(np.asarray(cache["k"])).max()
+        assert np.abs(np.asarray(out["k"]) - np.asarray(cache["k"])).max() <= E * 1.01
+
+    def test_end_to_end_logit_drift_small(self):
+        """KV compression must barely move the decode logits."""
+        comp = CompressionConfig(kv_cache_compression=True, kv_E_rel=1e-3, kv_Delta_rel=1e-2)
+        cfg = dataclasses.replace(get_smoke_config("qwen2-0.5b"), compression=comp)
+        cfg_ref = get_smoke_config("qwen2-0.5b")
+        prompt = np.arange(12) % cfg.vocab
+
+        outs = {}
+        for name, c in (("ref", cfg_ref), ("comp", cfg)):
+            eng = ServingEngine(c, ServeConfig(max_batch=1), rng_seed=0)
+            eng.submit(prompt, max_new_tokens=4)
+            outs[name] = eng.step()[0]["tokens"]
+        # greedy tokens should agree at this bound
+        assert outs["ref"] == outs["comp"], outs
+
+    def test_ssm_inapplicable_path(self):
+        """mamba2 has no KV cache: engine must serve with compression flag on."""
+        comp = CompressionConfig(kv_cache_compression=True)
+        cfg = dataclasses.replace(get_smoke_config("mamba2-2.7b"), compression=comp)
+        eng = ServingEngine(cfg, ServeConfig(max_batch=1))
+        eng.submit(np.arange(8), max_new_tokens=3)
+        assert len(eng.step()[0]["tokens"]) == 3

@@ -1,0 +1,99 @@
+"""Partition-rule unit tests (mesh-shape logic; real placement in test_distributed)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import data_axes
+from repro.models.model import build_model
+from repro.sharding.rules import batch_pspec, cache_pspecs, param_pspecs
+
+
+class _FakeMesh:
+    """Shape-only stand-in (avoids needing 256 devices in-process)."""
+
+    def __init__(self, sizes):
+        self._sizes = sizes
+        self.axis_names = tuple(sizes)
+        self.devices = np.zeros(tuple(sizes.values()))
+
+
+MESH = _FakeMesh({"data": 16, "model": 16})
+MESH3 = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+class TestParamRules:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_all_assignments_divisible(self, arch):
+        cfg = get_config(arch)
+        bundle = build_model(cfg)
+        tree = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+        specs = param_pspecs(tree, MESH)
+
+        def check(leaf, spec):
+            for i, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                size = int(np.prod([MESH._sizes[a] for a in (ax if isinstance(ax, tuple) else (ax,))]))
+                assert leaf.shape[i] % size == 0, (arch, leaf.shape, spec)
+
+        jax.tree.map(check, tree, specs, is_leaf=lambda x: isinstance(x, P))
+
+    def test_big_tensors_are_sharded(self):
+        """Embedding and MLP weights must not end up fully replicated."""
+        cfg = get_config("qwen2-7b")
+        tree = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+        specs = param_pspecs(tree, MESH)
+        assert specs["embed"] != P(None, None)
+        flat = jax.tree.leaves_with_path(specs, is_leaf=lambda x: isinstance(x, P))
+        mlp = [s for p, s in flat if "w_gu" in str(p)]
+        assert all(s[-1] == "model" for s in mlp)
+
+    def test_leading_stack_axis_unsharded(self):
+        cfg = get_config("qwen2-7b")
+        tree = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+        specs = param_pspecs(tree, MESH)
+        wq = specs["layers"]["attn"]["wqkv"]
+        assert wq[0] is None and len(wq) == 4  # (layer, d_model, H_total, hd)
+
+
+class TestBatchRules:
+    def test_divisible_batch_uses_all_dp(self):
+        spec = batch_pspec({"tokens": jax.ShapeDtypeStruct((256, 128), np.int32)}, MESH3)
+        assert spec["tokens"][0] == ("pod", "data")
+
+    def test_batch_1_replicates(self):
+        spec = batch_pspec({"tokens": jax.ShapeDtypeStruct((1, 128), np.int32)}, MESH)
+        assert spec["tokens"] == P(None, None)
+
+    def test_partial_dp_prefix(self):
+        # batch 2 on (pod=2, data=16): only the pod axis fits
+        spec = batch_pspec({"tokens": jax.ShapeDtypeStruct((2, 8), np.int32)}, MESH3)
+        assert spec["tokens"][0] in ("pod", ("pod",))
+
+
+class TestCacheRules:
+    def test_kv_heads_sharded_when_divisible(self):
+        cache = {
+            "k": jax.ShapeDtypeStruct((4, 32, 16, 1024, 64), np.float32),
+            "v": jax.ShapeDtypeStruct((4, 32, 16, 1024, 64), np.float32),
+            "pos": jax.ShapeDtypeStruct((4,), np.int32),
+        }
+        specs = cache_pspecs(cache, MESH)
+        assert specs["k"][2] == "model"
+        assert specs["pos"] == P(None)
+
+    def test_kv_headdim_fallback(self):
+        cache = {"k": jax.ShapeDtypeStruct((4, 32, 2, 1024, 64), np.float32)}
+        specs = cache_pspecs(cache, MESH)
+        assert specs["k"][2] is None and specs["k"][4] == "model"
+
+    def test_mesh_data_axes(self):
+        import jax as _jax
+
+        class M:
+            axis_names = ("pod", "data", "model")
+
+        assert data_axes(M()) == ("pod", "data")

@@ -1,0 +1,94 @@
+"""Spectrum metrics: Parseval, SSNR/PSNR, power-spectrum identities."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bounds import power_spectrum_delta, resolve_bounds
+from repro.core.spectrum import (
+    bitrate,
+    power_spectrum,
+    power_spectrum_relative_error,
+    psnr,
+    relative_frequency_error,
+    ssnr,
+    ssnr_spatial,
+)
+
+
+class TestPowerSpectrum:
+    def test_pure_tone_peak(self):
+        """A single harmonic must put (almost) all power in its shell."""
+        n = 64
+        t = np.arange(n)
+        x = 1.0 + 0.5 * np.cos(2 * np.pi * 8 * t / n)
+        k, p = power_spectrum(jnp.asarray(x))
+        p = np.asarray(p)
+        assert int(np.argmax(p[1:])) + 1 == 8
+
+    def test_parseval_motivation(self, rng):
+        """MSE is FFT-invariant (why the paper uses SSNR, not freq-PSNR)."""
+        x = rng.standard_normal(256)
+        y = x + rng.standard_normal(256) * 0.01
+        mse_s = np.mean((x - y) ** 2)
+        mse_f = np.mean(np.abs(np.fft.fft(x) - np.fft.fft(y)) ** 2) / 256
+        np.testing.assert_allclose(mse_s, mse_f, rtol=1e-6)
+
+    def test_relative_error_zero_for_identical(self, rng):
+        x = rng.standard_normal((16, 16, 16)).astype(np.float32)
+        _, rel = power_spectrum_relative_error(x, x)
+        assert np.abs(rel).max() == 0
+
+
+class TestMetrics:
+    def test_ssnr_infinite_for_exact(self, rng):
+        x = jnp.asarray(rng.standard_normal(128), dtype=jnp.float32)
+        assert float(ssnr_spatial(x, x)) > 100
+
+    def test_ssnr_monotone_in_noise(self, rng):
+        x = rng.standard_normal(512).astype(np.float32)
+        noisy = lambda s: jnp.asarray(x + rng.standard_normal(512).astype(np.float32) * s)
+        assert float(ssnr_spatial(noisy(1e-3), jnp.asarray(x))) > float(
+            ssnr_spatial(noisy(1e-1), jnp.asarray(x))
+        )
+
+    def test_psnr_known_value(self):
+        x = np.zeros(100, np.float32)
+        x[0] = 1.0  # range 1
+        y = x + 0.01
+        val = float(psnr(jnp.asarray(y), jnp.asarray(x)))
+        np.testing.assert_allclose(val, 40.0, atol=0.1)
+
+    def test_rfe_normalization(self, rng):
+        X = jnp.asarray(rng.standard_normal(64) + 1j * rng.standard_normal(64))
+        rfe = relative_frequency_error(X, X * 0 + X)  # zero error
+        assert np.abs(np.asarray(rfe)).max() == 0
+
+    def test_bitrate(self):
+        assert bitrate(100, 100) == 8.0
+
+
+class TestBounds:
+    def test_resolve_relative(self, rng):
+        x = jnp.asarray(rng.standard_normal((8, 8)), dtype=jnp.float32)
+        b = resolve_bounds(x, E_rel=0.01, Delta_rel=0.1)
+        rng_x = float(jnp.max(x) - jnp.min(x))
+        np.testing.assert_allclose(float(b.E), 0.01 * rng_x, rtol=1e-6)
+
+    def test_resolve_validates(self, rng):
+        x = jnp.zeros((4,))
+        with pytest.raises(ValueError):
+            resolve_bounds(x, E_abs=1.0, E_rel=1.0, Delta_rel=0.1)
+
+    @given(st.floats(1e-4, 0.5))
+    @settings(max_examples=30, deadline=None)
+    def test_pspec_delta_guarantee(self, rel):
+        """The derivation in power_spectrum_delta: |delta| <= t|X| ensures
+        relative power error <= rel, exactly (worst case check)."""
+        t = np.sqrt(1.0 + rel) - 1.0
+        X = 1.0 + 0j
+        worst_hi = abs(X + t * X) ** 2  # (1+t)^2
+        worst_lo = abs(X - t * X) ** 2  # (1-t)^2
+        assert worst_hi <= (1 + rel) * (1 + 1e-12)
+        assert worst_lo >= (1 - rel) * (1 - 1e-12)

@@ -1,0 +1,121 @@
+"""End-to-end system behaviour: the paper's pipeline + the framework around it."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.compressors import get_compressor
+from repro.configs import get_smoke_config
+from repro.core.ffcz import FFCz, FFCzConfig
+from repro.core.spectrum import psnr, ssnr_spatial
+from repro.data.fields import make_field
+
+
+class TestPaperClaims:
+    """Spot-checks of the paper's key observations on synthetic analogues."""
+
+    def test_obs1_edit_overhead_modest(self):
+        """Obs 1: edits reduce compression ratio only modestly vs the base."""
+        x = make_field("nyx-like")
+        base = get_compressor("szlike")
+        E = 1e-3 * np.ptp(x)
+        base_bytes = len(base.compress(x, E))
+        _, blob = FFCz(base, FFCzConfig(E_rel=1e-3, Delta_rel=1e-2, max_iters=500)).roundtrip(x)
+        overhead = blob.stats.edit_bytes / blob.stats.total_bytes
+        assert overhead < 0.6, overhead  # modest, not dominating
+        assert blob.stats.base_bytes <= base_bytes * 1.01
+
+    def test_obs2_cheaper_than_trial_and_error_at_equal_guarantee(self):
+        """Obs 2 / Table II core claim: enforcing the SAME dual-domain
+        guarantee via edits costs far fewer bytes than tightening the base
+        compressor's spatial bound until the frequency bound happens to hold.
+
+        Regime note (EXPERIMENTS.md §Reproduction): the claim holds when the
+        base compressor violates the bound at a sparse set of components —
+        the paper's 512^3 real fields are in that regime; among our
+        container-sized synthetics the diffraction-spot field is, so the
+        assertion runs there (cut=10x), and the full field x base sweep is
+        reported, not asserted, by benchmarks/table2_ratio.py."""
+        x = make_field("hedm-like")
+        base = get_compressor("szlike")
+
+        def max_freq_err(xh):
+            d = np.fft.fftn(xh.astype(np.float64)) - np.fft.fftn(x.astype(np.float64))
+            return max(np.abs(d.real).max(), np.abs(d.imag).max())
+
+        native = base.decompress(base.compress(x, 1e-3 * np.ptp(x)))
+        Delta = max_freq_err(native) / 10.0
+        c = FFCz(base, FFCzConfig(E_rel=1e-3, Delta_abs=float(Delta), E_abs=None,
+                                  Delta_rel=None, max_iters=1000))
+        xh, blob = c.roundtrip(x)
+        assert max_freq_err(xh) <= Delta * 1.001  # guarantee held
+
+        # trial-and-error: tighten E until the same frequency bound holds
+        E = 1e-3 * np.ptp(x)
+        blob_t = base.compress(x, E)
+        for _ in range(20):
+            if max_freq_err(base.decompress(blob_t)) <= Delta:
+                break
+            E *= 0.5
+            blob_t = base.compress(x, E)
+        assert blob.stats.total_bytes <= len(blob_t) * 1.05, (
+            blob.stats.total_bytes, len(blob_t))
+
+    def test_obs4_power_spectrum_within_ribbon(self):
+        """Obs 4 (Fig. 10): with pointwise bounds, the reconstructed power
+        spectrum stays within the requested relative ribbon everywhere."""
+        from repro.core.spectrum import power_spectrum_relative_error
+
+        x = make_field("nyx-like")[:32, :32, :32]
+        c = FFCz(
+            get_compressor("szlike"),
+            FFCzConfig(E_rel=1e-3, Delta_rel=None, pspec_rel=1e-3, max_iters=1500),
+        )
+        xh, _ = c.roundtrip(x)
+        _, rel = power_spectrum_relative_error(xh, x)
+        assert np.abs(rel[1:]).max() <= 1e-3 * 1.05
+
+    def test_table3_iteration_regimes(self):
+        """Table III: tiny Delta (f-cube inside s-cube) converges in 1 iter
+        with zero active spatial edits; moderate Delta needs more."""
+        x = make_field("eeg-like").astype(np.float32)[:4096]
+        base = get_compressor("szlike")
+
+        tiny = FFCz(base, FFCzConfig(E_rel=1e-3, Delta_rel=1e-7, max_iters=400)).compress(x)
+        assert tiny.stats.n_active_spatial == 0
+
+        mod = FFCz(base, FFCzConfig(E_rel=1e-3, Delta_rel=1e-4, max_iters=400)).compress(x)
+        assert mod.stats.iterations >= tiny.stats.iterations
+
+
+class TestFrameworkIntegration:
+    def test_quickstart_path(self, tmp_path):
+        """Train a smoke model briefly, serve from its weights."""
+        from repro.runtime.trainer import Trainer, TrainerConfig
+        from repro.serving.engine import ServeConfig, ServingEngine
+
+        cfg = get_smoke_config("granite-3-2b")
+        tr = Trainer(cfg, TrainerConfig(seq_len=32, global_batch=4, ckpt_dir=str(tmp_path), ckpt_every=10, ckpt_async=False))
+        out = tr.train(10)
+        assert np.isfinite(out["final_loss"])
+        eng = ServingEngine(cfg, ServeConfig(max_batch=2), params=tr.params)
+        eng.submit(np.arange(6), max_new_tokens=4)
+        assert len(eng.step()[0]["tokens"]) == 4
+
+    def test_checkpoint_compression_end_to_end(self, tmp_path):
+        """FFCz-compressed checkpoints restore within bound and still train."""
+        comp_cfg = get_smoke_config("qwen2-0.5b")
+        comp = dataclasses.replace(
+            comp_cfg,
+            compression=dataclasses.replace(comp_cfg.compression, checkpoint_compression=True,
+                                            ckpt_E_rel=1e-5, ckpt_Delta_rel=1e-5),
+        )
+        from repro.runtime.trainer import Trainer, TrainerConfig
+
+        tr = Trainer(comp, TrainerConfig(seq_len=32, global_batch=4, ckpt_dir=str(tmp_path), ckpt_every=5, ckpt_async=False))
+        tr.train(5)
+        tr2 = Trainer(comp, TrainerConfig(seq_len=32, global_batch=4, ckpt_dir=str(tmp_path), ckpt_every=5, ckpt_async=False))
+        assert tr2.start_step == 5
+        out = tr2.train(5)
+        assert np.isfinite(out["final_loss"])

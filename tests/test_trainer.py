@@ -1,0 +1,78 @@
+"""Trainer fault tolerance: restart, failure injection, determinism, progress."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import CompressionConfig, get_smoke_config
+from repro.runtime.elastic import plan_mesh_shape, survivors_after_pod_loss
+from repro.runtime.trainer import SimulatedFailure, Trainer, TrainerConfig
+
+
+def _run_cfg(td, **kw):
+    base = dict(seq_len=32, global_batch=4, ckpt_dir=str(td), ckpt_every=5,
+                ckpt_async=False, log_every=5)
+    base.update(kw)
+    return TrainerConfig(**base)
+
+
+class TestFaultTolerance:
+    def test_failure_then_restart_resumes(self, tmp_path):
+        cfg = get_smoke_config("qwen2-0.5b")
+        tr = Trainer(cfg, _run_cfg(tmp_path, inject_failure_at=7))
+        with pytest.raises(SimulatedFailure):
+            tr.train(20)
+        tr2 = Trainer(cfg, _run_cfg(tmp_path))
+        assert tr2.start_step == 5  # last committed checkpoint
+        out = tr2.train(5)
+        assert out["final_step"] == 10
+
+    def test_restart_is_deterministic(self, tmp_path):
+        """Uninterrupted run and crash+resume must produce the same loss
+        (counter-mode data pipeline + checkpointed optimizer state)."""
+        cfg = get_smoke_config("qwen2-0.5b")
+        tr = Trainer(cfg, _run_cfg(tmp_path / "a", ckpt_every=100))
+        ref = tr.train(10)["final_loss"]
+
+        tr1 = Trainer(cfg, _run_cfg(tmp_path / "b", ckpt_every=5))
+        tr1.train(5)
+        tr2 = Trainer(cfg, _run_cfg(tmp_path / "b", ckpt_every=5))
+        assert tr2.start_step == 5
+        out = tr2.train(5)
+        np.testing.assert_allclose(out["final_loss"], ref, rtol=1e-4)
+
+    def test_loss_decreases(self, tmp_path):
+        cfg = get_smoke_config("qwen2-0.5b")
+        tr = Trainer(cfg, _run_cfg(tmp_path, ckpt_every=1000, log_every=1))
+        out = tr.train(30)
+        first = out["metrics"][0]["loss"]
+        last = out["metrics"][-1]["loss"]
+        assert last < first, (first, last)
+
+    def test_grad_compression_still_learns(self, tmp_path):
+        comp = CompressionConfig(grad_compression=True, grad_E_rel=1e-2, grad_Delta_rel=1e-1, grad_block=512)
+        cfg = dataclasses.replace(get_smoke_config("qwen2-0.5b"), compression=comp)
+        tr = Trainer(cfg, _run_cfg(tmp_path, ckpt_every=1000, log_every=1))
+        out = tr.train(30)
+        assert out["metrics"][-1]["loss"] < out["metrics"][0]["loss"]
+
+    def test_straggler_tracking(self, tmp_path):
+        cfg = get_smoke_config("qwen2-0.5b")
+        tr = Trainer(cfg, _run_cfg(tmp_path, ckpt_every=1000))
+        tr.step_times = [0.1] * 10
+        tr._track_straggler(11, 1.0)  # 10x median
+        assert tr.straggler_events and tr.straggler_events[-1]["step"] == 11
+
+
+class TestElastic:
+    def test_plan_keeps_tp_when_divisible(self):
+        assert plan_mesh_shape(512, 16)[0] == (32, 16)
+        assert plan_mesh_shape(256, 16)[0] == (16, 16)
+
+    def test_plan_degrades_tp(self):
+        shape, _ = plan_mesh_shape(24, 16)
+        assert shape[0] * shape[1] == 24 and shape[1] <= 16
+
+    def test_pod_loss(self):
+        assert survivors_after_pod_loss(512, 2, 1) == 256
