@@ -1,0 +1,69 @@
+"""Tier-1 gate for CI: run the ROADMAP test command and fail only on NEW
+failures (regressions) relative to ci/known_failures.txt.
+
+Known failures are environment-dependent seed-era issues (flash-attention
+kernel tolerances on CPU, distributed subprocess tests, ...) tracked for
+burn-down; anything not on the list fails the build, and tests that start
+passing are reported so the list can shrink.
+
+Usage:  PYTHONPATH=src python ci/check_tier1.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+KNOWN = os.path.join(HERE, "known_failures.txt")
+
+
+def main() -> int:
+    with open(KNOWN) as f:
+        known = {line.strip() for line in f if line.strip() and not line.startswith("#")}
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "--tb=no", "-rEf"],
+        cwd=os.path.dirname(HERE),
+        capture_output=True,
+        text=True,
+    )
+    out = proc.stdout + proc.stderr
+    print(out[-4000:])
+
+    # pytest exit codes: 0 = all passed, 1 = some tests failed; anything else
+    # (2 interrupted, 3 internal error, 4 usage error, 5 nothing collected)
+    # means the suite did not actually run — never report that as green
+    if proc.returncode not in (0, 1):
+        print(f"\npytest exited with code {proc.returncode} — suite did not run")
+        return 1
+    m = re.search(r"(\d+) passed", out)
+    if not m or int(m.group(1)) == 0:
+        print("\nno tests passed — suite did not run")
+        return 1
+
+    failed = set()
+    for line in out.splitlines():
+        m = re.match(r"^(?:FAILED|ERROR)\s+(\S+)", line)
+        if m:
+            failed.add(m.group(1).split(" ")[0].rstrip(":"))
+
+    new = sorted(failed - known)
+    fixed = sorted(known - failed)
+    if fixed:
+        print(f"\n{len(fixed)} known failure(s) now pass — prune ci/known_failures.txt:")
+        for t in fixed:
+            print(f"  {t}")
+    if new:
+        print(f"\nREGRESSION: {len(new)} new failing test(s):")
+        for t in new:
+            print(f"  {t}")
+        return 1
+    print(f"\ntier-1 OK: {len(failed)} failures, all known ({len(known)} on the list)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

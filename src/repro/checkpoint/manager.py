@@ -71,9 +71,12 @@ class CheckpointManager:
             "dtypes": [str(l.dtype) for l in leaves],
             "shapes": [list(l.shape) for l in leaves],
         }
-        for i, leaf in enumerate(leaves):
+        # one batched encode for the whole state: all leaves' POCS corrections
+        # run in a single device program (see CheckpointCodec.encode_batch)
+        blobs = self.codec.encode_batch(leaves)
+        for i, blob in enumerate(blobs):
             with open(os.path.join(tmp, f"{i}.bin"), "wb") as f:
-                f.write(self.codec.encode(leaf))
+                f.write(blob)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         with open(os.path.join(tmp, "_COMMITTED"), "w") as f:

@@ -7,18 +7,30 @@ block's local spectrum.  Correction is a single jitted, vmapped (and, under
 ``shard_map``, fully distributed) alternating projection; there is no
 host round-trip per block.
 
-``blockwise_correct`` is the workhorse used by gradient compression
-(optim/grad_compress.py), checkpoint compression (checkpoint/codec.py) and
-KV-cache compression (serving/kv_compress.py).
+Two entry points:
+
+``blockwise_correct``     — one tensor, one (scalar-bound) correction.
+``correct_batch``         — MANY heterogeneous tensors in ONE device program:
+    each tensor is flattened, padded and tiled into shared ``(B, block)``
+    buffers (inputs donated when corrected outputs are produced, so each
+    output aliases its input), per-tensor bounds become per-block bound
+    vectors, and a single vmapped POCS while_loop corrects everything.  Per-instance convergence is
+    masked inside the loop (a converged block's state is frozen while
+    stragglers iterate), and per-tensor iteration counts / convergence flags
+    are reported.  This is what the framework integrations
+    (optim/grad_compress, serving/kv_compress, checkpoint/codec) call so
+    multi-tensor workloads stop paying per-tensor dispatch.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.pocs import alternating_projection
 
@@ -72,8 +84,139 @@ def blockwise_correct_with_edits(
     max_iters: int = 50,
 ):
     """Like :func:`blockwise_correct` but also returns (spat_edits, freq_edits,
-    iterations-per-block, converged-per-block) for serialization paths."""
+    iterations-per-block, converged-per-block) for serialization paths.
+    ``freq_edits`` are per-block rfft half-spectra, shape (n_blocks, block//2+1)."""
     tiles, pad = tile_1d(eps, block)
     res = jax.vmap(lambda t: alternating_projection(t, E, Delta, max_iters=max_iters))(tiles)
     corrected = untile_1d(res.eps, eps.shape, pad)
     return corrected, res.spat_edits, res.freq_edits, res.iterations, res.converged
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BatchCorrectionStats:
+    """Per-instance accounting for one :func:`correct_batch` call."""
+
+    iterations: Any  # (n_tensors,) int32: max POCS iterations over the tensor's blocks
+    converged: Any  # (n_tensors,) bool: every block of the tensor converged
+    block_iterations: Any  # (total_blocks,) int32
+    block_converged: Any  # (total_blocks,) bool
+
+
+def _correct_batch_core(tensors, E_arr, Delta_arr, block, max_iters, return_edits, return_corrected):
+    """The whole batched correction — pack, vmapped POCS, unpack, per-instance
+    stats — as ONE device program (no per-tensor dispatch)."""
+    n = len(tensors)
+    tiles_list, pads, counts = [], [], []
+    for t in tensors:
+        tiles, pad = tile_1d(t.astype(jnp.float32), block)
+        tiles_list.append(tiles)
+        pads.append(pad)
+        counts.append(tiles.shape[0])
+    packed = jnp.concatenate(tiles_list, axis=0)
+    seg = jnp.asarray(np.repeat(np.arange(n), counts), dtype=jnp.int32)
+    E_blk = E_arr.astype(jnp.float32)[seg]
+    D_blk = Delta_arr.astype(jnp.float32)[seg]
+
+    res = jax.vmap(
+        lambda t, e, d: alternating_projection(t, e, d, max_iters=max_iters)
+    )(packed, E_blk, D_blk)
+
+    corrected, edits = [], []
+    offset = 0
+    for t, pad, nb in zip(tensors, pads, counts):
+        sl = slice(offset, offset + nb)
+        if return_corrected:
+            corrected.append(untile_1d(res.eps[sl], t.shape, pad).astype(t.dtype))
+        if return_edits:
+            edits.append((res.spat_edits[sl], res.freq_edits[sl]))
+        offset += nb
+    stats = BatchCorrectionStats(
+        iterations=jax.ops.segment_max(res.iterations, seg, num_segments=n),
+        converged=jax.ops.segment_min(res.converged.astype(jnp.int32), seg, num_segments=n) == 1,
+        block_iterations=res.iterations,
+        block_converged=res.converged,
+    )
+    return tuple(corrected), tuple(edits), stats
+
+
+_BATCH_STATICS = ("block", "max_iters", "return_edits", "return_corrected")
+# donating makes each corrected output alias its input buffer; without
+# corrected outputs there is nothing to alias, so donation would only warn
+_correct_batch_donated = functools.partial(
+    jax.jit, static_argnames=_BATCH_STATICS, donate_argnums=(0,)
+)(_correct_batch_core)
+_correct_batch_plain = functools.partial(jax.jit, static_argnames=_BATCH_STATICS)(
+    _correct_batch_core
+)
+
+
+def _as_bound_array(v, n: int) -> jnp.ndarray:
+    if isinstance(v, (list, tuple)):
+        if len(v) != n:
+            # must raise (not assert): a short list would otherwise apply the
+            # wrong bounds silently via JAX's out-of-range index clamping
+            raise ValueError(f"expected {n} per-tensor bounds, got {len(v)}")
+        return jnp.stack([jnp.asarray(x, dtype=jnp.float32) for x in v])
+    return jnp.broadcast_to(jnp.asarray(v, dtype=jnp.float32), (n,))
+
+
+def correct_batch(
+    tensors: Sequence[jnp.ndarray],
+    E,
+    Delta,
+    block: int = 4096,
+    max_iters: int = 50,
+    return_edits: bool = False,
+    return_corrected: bool = True,
+):
+    """Correct a heterogeneous batch of error tensors in one device program.
+
+    Args:
+      tensors: arbitrary-shape real tensors (each flattened + zero-padded
+        into ``block``-length pencils; padded tails are discarded on unpack).
+        When ``return_corrected`` (the default), top-level callers' buffers
+        are DONATED — each corrected output aliases its input, so don't
+        reuse the passed arrays afterwards.  Edits-only calls
+        (``return_corrected=False``) leave inputs intact.
+      E, Delta: scalar bounds, or per-tensor sequences of scalars.
+      block: pencil length shared by the whole batch.
+      max_iters: POCS iteration cap (shared).
+      return_edits: also return, per tensor, the padded-tile edit streams
+        ``(spat_edits (n_blocks, block), freq_edits (n_blocks, block//2+1))``
+        for serialization paths (half-spectrum rfft layout).
+      return_corrected: set False (with ``return_edits``) to skip
+        materializing the per-tensor corrected outputs when only the edit
+        streams are consumed — ``corrected`` is then an empty list.
+
+    Returns ``(corrected, stats)`` — or ``(corrected, edits, stats)`` with
+    ``return_edits`` — where ``corrected[i]`` has ``tensors[i]``'s shape and
+    dtype and ``stats`` is a :class:`BatchCorrectionStats`.
+
+    The packing, the vmapped POCS while_loop (per-instance convergence
+    masked), the unpack and the per-instance stat reductions compile into a
+    single jitted program; callable from inside a larger jitted program too.
+    """
+    n = len(tensors)
+    if n == 0:
+        stats = BatchCorrectionStats(
+            iterations=jnp.zeros((0,), jnp.int32),
+            converged=jnp.zeros((0,), bool),
+            block_iterations=jnp.zeros((0,), jnp.int32),
+            block_converged=jnp.zeros((0,), bool),
+        )
+        return ([], [], stats) if return_edits else ([], stats)
+    tensors = tuple(jnp.asarray(t) for t in tensors)
+    impl = _correct_batch_donated if return_corrected else _correct_batch_plain
+    corrected, edits, stats = impl(
+        tensors,
+        _as_bound_array(E, n),
+        _as_bound_array(Delta, n),
+        block=block,
+        max_iters=max_iters,
+        return_edits=return_edits,
+        return_corrected=return_corrected,
+    )
+    if return_edits:
+        return list(corrected), list(edits), stats
+    return list(corrected), stats

@@ -59,7 +59,9 @@ def resolve_bounds(
         E_abs = E_rel * rng
     if Delta_abs is None:
         if X is None:
-            X = jnp.fft.fftn(x)
+            # the rfft half-spectrum suffices: |X_{-k}| = |X_k| for real x,
+            # so max_k |X_k| over the half-plane equals the full-plane max
+            X = jnp.fft.rfftn(x)
         Delta_abs = Delta_rel * jnp.max(jnp.abs(X))
     return DualBounds(E=E_abs, Delta=Delta_abs)
 
@@ -95,3 +97,16 @@ def power_spectrum_delta(X: jnp.ndarray, rel: float, floor: float = 0.0) -> jnp.
     dc_bound = (rel / 8.0) * jnp.abs(X.reshape(-1)[0])
     delta = delta.reshape(-1).at[0].set(jnp.minimum(delta.reshape(-1)[0], dc_bound)).reshape(X.shape)
     return delta
+
+
+def power_spectrum_delta_rfft(X_half: jnp.ndarray, rel: float, floor: float = 0.0) -> jnp.ndarray:
+    """:func:`power_spectrum_delta` on the rfft half-spectrum.
+
+    ``X_half = rfftn(x)`` keeps every independent component of a real
+    field's Hermitian-symmetric spectrum, the DC component stays at flat
+    index 0, and ``|X|``-derived grids are symmetric — so the pointwise
+    ``Delta_k`` grid computed here *is* the half-plane restriction of the
+    full-spectrum grid, at half the FFT work and memory.  This is the grid
+    the rFFT POCS fast path consumes directly.
+    """
+    return power_spectrum_delta(X_half, rel, floor=floor)

@@ -13,15 +13,50 @@ Hermitian symmetry ``delta_{N-k} = conj(delta_k)`` of the spectrum of a real
 error vector (clip is odd for Im, even for Re), so IFFT(clipped) stays real —
 this is why the paper can clip components independently on the GPU.
 
+That same symmetry means the full spectrum is redundant: the half-spectrum
+kept by ``rfftn`` (last axis ``0..N//2``) holds every independent component.
+The rFFT fast path of :mod:`repro.core.pocs` therefore projects only the
+half-spectrum; :func:`rfft_pair_weights` supplies the conjugate-pair
+multiplicities so violation *counts* still match full-spectrum semantics.
+
 These are the pure-jnp oracles; :mod:`repro.kernels.fcube` / ``scube`` are the
 fused Pallas TPU kernels with identical semantics.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
+import numpy as np
+
+
+def rfft_shape(shape: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Shape of ``rfftn`` output for a real field of ``shape``."""
+    return tuple(shape[:-1]) + (shape[-1] // 2 + 1,)
+
+
+def rfft_pair_weights(shape: Tuple[int, ...], dtype=jnp.int32) -> jnp.ndarray:
+    """Conjugate-pair multiplicity of each half-spectrum component.
+
+    For a real field of full ``shape``, a component at last-axis index
+    ``0 < k < N/2`` stands for itself *and* its conjugate at ``N-k`` (which
+    ``rfftn`` drops) — weight 2.  The ``k = 0`` plane and (even ``N``) the
+    ``k = N/2`` plane are fully present in the half-spectrum, so each of
+    their components counts once — weight 1.  (Those planes are internally
+    Hermitian-redundant across the *other* axes, but both members of each
+    such pair are stored, so per-component counting stays exact.)
+
+    Returns a ``(1, ..., 1, N//2 + 1)`` array broadcastable against the
+    half-spectrum; ``sum(weights * ones) == prod(shape)``.
+    """
+    n = shape[-1]
+    h = n // 2 + 1
+    w = np.full(h, 2, dtype=np.int64)
+    w[0] = 1
+    if n % 2 == 0:
+        w[-1] = 1
+    return jnp.asarray(w, dtype=dtype).reshape((1,) * (len(shape) - 1) + (h,))
 
 
 def project_scube(eps: jnp.ndarray, E) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -34,6 +69,8 @@ def project_fcube(delta: jnp.ndarray, Delta) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Clip complex frequency errors to the f-cube (independent Re/Im clip).
 
     Returns (clipped, displacement) — both complex, same shape as ``delta``.
+    Works identically on full and half spectra (the f-cube is axis-aligned,
+    so restriction to the rfft half-plane is still the exact projection).
     """
     re = jnp.clip(delta.real, -Delta, Delta)
     im = jnp.clip(delta.imag, -Delta, Delta)
@@ -41,9 +78,42 @@ def project_fcube(delta: jnp.ndarray, Delta) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return clipped, clipped - delta
 
 
-def fcube_violations(delta: jnp.ndarray, Delta) -> jnp.ndarray:
-    """Count of frequency components outside the f-cube (CheckConvergence)."""
-    return jnp.sum((jnp.abs(delta.real) > Delta) | (jnp.abs(delta.imag) > Delta))
+def project_box_relaxed(x: jnp.ndarray, bound, relax: float) -> jnp.ndarray:
+    """Closed-form ``P(x + relax*(P(x) - x))`` for the box ``|x| <= bound``.
+
+    Over-relaxed POCS re-projects the over-shot point; for a box that
+    composition collapses to a single clip of the shrunk magnitude:
+
+        P(x + r*(P(x)-x)) = sign(x) * clip(|x| - r*max(|x|-bound, 0), -bound, bound)
+
+    (inside the box the excess term vanishes; outside, the magnitude is
+    pulled ``r`` times the excess toward — and for r > 1 past — the face,
+    and the final clip handles the large-overshoot reflection).  One pass
+    over the data instead of project -> displace -> re-project.
+    """
+    a = jnp.abs(x)
+    m = a - relax * jnp.maximum(a - bound, 0.0)
+    return jnp.sign(x) * jnp.clip(m, -bound, bound)
+
+
+def project_fcube_relaxed(delta: jnp.ndarray, Delta, relax: float) -> jnp.ndarray:
+    """Relaxed f-cube projection, one clip per Re/Im channel (see above)."""
+    re = project_box_relaxed(delta.real, Delta, relax)
+    im = project_box_relaxed(delta.imag, Delta, relax)
+    return (re + 1j * im).astype(delta.dtype)
+
+
+def fcube_violations(delta: jnp.ndarray, Delta, weight: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Count of frequency components outside the f-cube (CheckConvergence).
+
+    ``weight`` (broadcastable int array) scales each component's contribution;
+    the rfft fast path passes :func:`rfft_pair_weights` so the count over the
+    half-spectrum equals the count over the full spectrum.
+    """
+    viol = (jnp.abs(delta.real) > Delta) | (jnp.abs(delta.imag) > Delta)
+    if weight is None:
+        return jnp.sum(viol)
+    return jnp.sum(viol.astype(weight.dtype) * weight)
 
 
 def scube_violations(eps: jnp.ndarray, E) -> jnp.ndarray:

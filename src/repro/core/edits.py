@@ -30,7 +30,14 @@ from repro.coding.quantize import DEFAULT_QUANT_BITS, dequantize_uniform, quanti
 
 @dataclasses.dataclass(frozen=True)
 class EncodedEdits:
-    """One serialized edit stream (spatial or frequency)."""
+    """One serialized edit stream (spatial or frequency).
+
+    ``half_spectrum`` marks a frequency stream stored in rfft layout (last
+    axis ``N//2 + 1`` of the field; ``shape`` is then the *half-spectrum*
+    shape) — the decoder must reconstruct via ``irfftn``.  The flag rides in
+    bit 7 of the packed header byte; pre-rfft blobs have that bit clear, so
+    legacy full-spectrum streams decode unchanged.
+    """
 
     shape: tuple
     is_complex: bool
@@ -38,15 +45,23 @@ class EncodedEdits:
     payload: bytes  # lossless-compressed quantized values
     n_active: int
     quant_bits: int
+    half_spectrum: bool = False
 
     def nbytes(self) -> int:
-        return len(self.flags) + len(self.payload) + 16
+        # Exact serialized size: fixed header + one Q per shape dim + streams
+        # (must match to_bytes(); a flat estimate here skews reported ratios).
+        return len(self.flags) + len(self.payload) + struct.calcsize("<BBIQQ") + 8 * len(self.shape)
 
     def to_bytes(self) -> bytes:
+        # packed byte: bit 0 complex, bits 1-6 quant_bits (< 64), bit 7 rfft layout
+        if not 0 <= self.quant_bits < 64:
+            raise ValueError(f"quant_bits={self.quant_bits} must fit in 6 header bits")
         header = struct.pack(
             "<BBIQQ",
             len(self.shape),
-            (1 if self.is_complex else 0) | (self.quant_bits << 1),
+            (1 if self.is_complex else 0)
+            | (self.quant_bits << 1)
+            | (0x80 if self.half_spectrum else 0),
             self.n_active,
             len(self.flags),
             len(self.payload),
@@ -68,7 +83,8 @@ class EncodedEdits:
             flags=flags,
             payload=payload,
             n_active=n_active,
-            quant_bits=packed >> 1,
+            quant_bits=(packed >> 1) & 0x3F,
+            half_spectrum=bool(packed & 0x80),
         )
 
 
@@ -77,11 +93,15 @@ def encode_edits(
     bound,
     m: int = DEFAULT_QUANT_BITS,
     codec: str = "huffman+zlib",
+    half_spectrum: bool = False,
 ) -> EncodedEdits:
     """Compact + quantize + losslessly compress one edit stream.
 
     ``bound`` may be scalar or a per-component array of the same shape as
-    ``edits`` (pointwise Delta_k grids).
+    ``edits`` (pointwise Delta_k grids).  ``half_spectrum`` tags a frequency
+    stream already living on the rfft half-spectrum (the shrunken edit
+    stream of the rFFT fast path) so the decoder reconstructs via
+    ``irfftn``.
     """
     edits = np.asarray(edits)
     is_complex = np.iscomplexobj(edits)
@@ -114,6 +134,7 @@ def encode_edits(
         payload=lossless_compress(compact, codec=codec),
         n_active=int(active.size),
         quant_bits=m,
+        half_spectrum=half_spectrum,
     )
 
 

@@ -9,8 +9,17 @@ This is the end-to-end pipeline of the paper (Fig. 4 / Alg. 1):
     4. encode_edits(...)              -> flags + quantized + Huffman/zlib
 
   decompress(blob):
-    x_hat_base + spat_edits + IFFT(freq_edits).real
+    x_hat_base + spat_edits + IRFFT(freq_edits)
     (the "complete spatial edits" of §IV-B)
+
+rFFT fast path: the error vector is real, so the whole frequency side runs
+on the Hermitian half-spectrum — the POCS loop (``use_rfft``), the pointwise
+``pspec_rel`` Delta grids, the float64 polish, the adaptive quant-bit
+cross-leakage accounting (conjugate-pair weighted), and the serialized
+``freq_edits`` stream (roughly half the components to flag/quantize/store).
+The blob marks half-spectrum streams via ``EncodedEdits.half_spectrum``
+(bit 7 of the packed header byte); blobs written by the old full-spectrum
+pipeline have the bit clear and decode through the legacy ``ifftn`` branch.
 
 Bound discipline: the projection runs against bounds shrunk by
 ``(1 - 2^-m - slack)`` so that quantization error (direct term, <= bound*2^-m)
@@ -30,7 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.coding.quantize import DEFAULT_QUANT_BITS
-from repro.core.bounds import power_spectrum_delta, resolve_bounds
+from repro.core.bounds import power_spectrum_delta_rfft, resolve_bounds
+from repro.core.cubes import rfft_pair_weights, rfft_shape
 from repro.core.edits import EncodedEdits, decode_edits, encode_edits
 from repro.core.pocs import alternating_projection
 
@@ -94,10 +104,15 @@ class FFCzBlob:
 
     base_blob: bytes
     spat_edits: EncodedEdits
+    # Frequency edit stream.  New blobs store the rfft half-spectrum (its
+    # ``half_spectrum`` format flag set); legacy blobs store the full
+    # spectrum and decode through the ifftn branch of ``FFCz.decompress``.
     freq_edits: EncodedEdits
     E: float
     Delta_scalar: float  # scalar Delta, or nan when pointwise (stored in blob)
-    pointwise_delta: Optional[bytes]  # float32 Delta_k array bytes, or None
+    # float32 Delta_k grid bytes, or None; half-spectrum layout iff
+    # ``freq_edits.half_spectrum`` (legacy blobs stored the full grid)
+    pointwise_delta: Optional[bytes]
     shape: tuple
     stats: Optional[FFCzStats] = None
 
@@ -145,26 +160,84 @@ class FFCzBlob:
         return len(self.to_bytes())
 
 
-def _polish_float64(eps, spat, freq, E, Delta, max_iters: int = 30):
+def _irfftn(a: np.ndarray, shape) -> np.ndarray:
+    """numpy irfftn with explicit axes (required for odd last-axis sizes)."""
+    return np.fft.irfftn(a, s=shape, axes=tuple(range(len(shape))))
+
+
+def polish_pocs_float64(eps, spat, freq, E, Delta, axes=None, max_iters: int = 30):
     """Exact (float64) POCS iterations to absorb float32 FFT round-off.
 
-    Residual violations after the float32 loop are O(eps32 * ||delta||_inf),
-    orders of magnitude below the bounds, so this converges in a handful of
+    Runs on the rfft half-spectrum over ``axes`` (default: all axes —
+    whole-field polish; the blockwise checkpoint codec passes the pencil
+    axis), with ``freq`` the matching half-spectrum accumulator.  Residual
+    violations after the float32 loop are O(eps32 * ||delta||_inf), orders
+    of magnitude below the bounds, so this converges in a handful of
     iterations and contributes negligibly to the edit payload.
     """
+    axes = tuple(range(eps.ndim)) if axes is None else tuple(axes)
+    s = [eps.shape[a] for a in axes]
     for _ in range(max_iters):
-        delta = np.fft.fftn(eps)
+        delta = np.fft.rfftn(eps, axes=axes)
         re = np.clip(delta.real, -Delta, Delta)
         im = np.clip(delta.imag, -Delta, Delta)
         clipped = re + 1j * im
         if np.array_equal(clipped, delta):
             break
         freq = freq + (clipped - delta)
-        eps_f = np.fft.ifftn(clipped).real
+        eps_f = np.fft.irfftn(clipped, s=s, axes=axes)
         eps_s = np.clip(eps_f, -E, E)
         spat = spat + (eps_s - eps_f)
         eps = eps_s
     return eps, spat, freq
+
+
+def float32_bound_discipline(E, Delta, m: int, l2_norm: float, abs_max: float):
+    """Shrink user bounds for quantization + float32-storage round-off.
+
+    Reserves 2x the direct quantization term (one for the stream's own
+    noise, one for the other stream's cross-domain leakage — matched by
+    :func:`adaptive_quant_bits`), subtracts the absolute float32 slack
+    (casting the reconstruction perturbs each frequency component by
+    ~u32*l2_norm, 4-sigma statistical budget, and each point by
+    u32*abs_max), and clamps Delta at 4x the frequency slack so the bound
+    stays representable.  ``Delta`` may be a scalar or a pointwise grid.
+    Shared by the whole-field pipeline (``FFCz.compress``) and the
+    blockwise checkpoint codec (per-pencil norms), so the guarantee math
+    lives in one place.
+
+    Returns ``(E_proj, Delta_proj, Delta_floored, slack_f)``.
+    """
+    u32 = float(np.finfo(np.float32).eps)
+    shrink = 1.0 - 2.0 ** (-m) - 2.0 ** (-m)
+    slack_f = 4.0 * u32 * float(l2_norm)
+    slack_s = u32 * float(abs_max)
+    Delta = np.maximum(Delta, 4.0 * slack_f)
+    return E * shrink - slack_s, Delta * shrink - slack_f, Delta, slack_f
+
+
+def adaptive_quant_bits(m: int, k_s: int, E: float, min_delta: float, sum_w_delta: float, n: int, cap: int = 48):
+    """Closed-form edit-stream bit-widths covering cross-domain quant leakage.
+
+    The base width ``m`` covers each stream's *direct* quantization term;
+    the widened widths also fit the cross terms inside the same reserved
+    margin: ``k_s`` quantized spatial edits perturb every frequency
+    component by up to ``k_s * E * 2^-m_s`` after the FFT (kept under
+    ``min_delta * 2^-m``), and the active frequency edits — ``sum_w_delta``
+    being their conjugate-pair-weighted Delta sum — perturb every spatial
+    point by up to ``(sqrt2/n) * sum_w_delta * 2^-m_f`` after the IFFT
+    (kept under ``E * 2^-m``).  Shared by the whole-field pipeline
+    (``FFCz.compress``) and the blockwise checkpoint codec (per worst-case
+    pencil), so the guarantee math lives in one place.
+    """
+    m_s = m
+    if k_s > 0 and min_delta > 0 and E > 0:
+        m_s = m + max(0, int(np.ceil(np.log2(max(k_s * E / min_delta, 1.0)))))
+    m_f = m
+    if sum_w_delta > 0 and E > 0 and n > 0:
+        ratio = np.sqrt(2.0) * sum_w_delta / (n * E)
+        m_f = m + max(0, int(np.ceil(np.log2(max(ratio, 1.0)))))
+    return min(m_s, cap), min(m_f, cap)
 
 
 class FFCz:
@@ -183,28 +256,21 @@ class FFCz:
     def compress(self, x: np.ndarray) -> FFCzBlob:
         cfg = self.config
         x = np.asarray(x, dtype=np.float32)
-        X = np.fft.fftn(x)
+        # Hermitian fast path: all frequency-side work (bounds, POCS, polish,
+        # edit stream) happens on the rfft half-spectrum
+        X = np.fft.rfftn(x)
 
-        # Representability floor: the reconstruction is stored in the data's
-        # own precision (float32).  Per-point rounding noise is iid in
-        # (-u|x|, u|x|), so each frequency component of the noise has std
-        # <= u*||x||_2/sqrt(2); we budget 4 sigma as the absolute slack and
-        # clamp Delta at 4x that (the deterministic u*||x||_1 bound is ~50x
-        # more conservative and was measured to dominate weak shells'
-        # power-spectrum ribbon).  The float64 post-hoc verification remains
-        # the hard backstop on every compress.
-        u32 = float(np.finfo(np.float32).eps)
-        slack_stat = 4.0 * u32 * float(np.linalg.norm(x.ravel()))
-        repr_floor = 4.0 * slack_stat
-
+        # Resolve user bounds, then apply the shared float32 bound discipline
+        # (quantization shrink + storage slack + representability Delta
+        # floor — see :func:`float32_bound_discipline`; the 4-sigma
+        # statistical slack was chosen over the deterministic u*||x||_1
+        # bound, which is ~50x more conservative and was measured to
+        # dominate weak shells' power-spectrum ribbon).
         if cfg.pspec_rel is not None:
-            Delta = np.asarray(power_spectrum_delta(jnp.asarray(X), cfg.pspec_rel), dtype=np.float32)
-            floor = float(Delta.max()) * cfg.pspec_floor_rel if Delta.max() > 0 else 1.0
-            Delta = np.maximum(Delta, max(floor, repr_floor))
+            Delta_user = np.asarray(power_spectrum_delta_rfft(jnp.asarray(X), cfg.pspec_rel), dtype=np.float32)
+            floor = float(Delta_user.max()) * cfg.pspec_floor_rel if Delta_user.max() > 0 else 1.0
+            Delta_user = np.maximum(Delta_user, floor)
             bounds = resolve_bounds(jnp.asarray(x), E_abs=cfg.E_abs, E_rel=cfg.E_rel, Delta_abs=1.0)
-            E = float(bounds.E)
-            delta_scalar = float("nan")
-            pointwise = Delta.astype(np.float32).tobytes()
         else:
             bounds = resolve_bounds(
                 jnp.asarray(x),
@@ -214,21 +280,22 @@ class FFCz:
                 Delta_rel=cfg.Delta_rel,
                 X=jnp.asarray(X),
             )
-            E = float(bounds.E)
-            Delta = max(float(bounds.Delta), repr_floor)
+            Delta_user = float(bounds.Delta)
+        E = float(bounds.E)
+        E_proj, Delta_proj, Delta, slack_f = float32_bound_discipline(
+            E,
+            Delta_user,
+            cfg.quant_bits,
+            np.linalg.norm(x.ravel()),
+            np.max(np.abs(x)) if x.size else 0.0,
+        )
+        if cfg.pspec_rel is not None:
+            delta_scalar = float("nan")
+            pointwise = Delta.astype(np.float32).tobytes()
+        else:
+            Delta = float(Delta)
             delta_scalar = Delta
             pointwise = None
-
-        # Shrink bounds: relative 2*2^-m for quantization (direct + cross-domain
-        # leakage, matched by the adaptive bit-widths below), plus the
-        # *absolute* float32-storage slack: casting the final reconstruction
-        # to float32 perturbs each point by <= u*|x|, i.e. each frequency
-        # component by <= u*||x||_1 and each spatial point by <= u*max|x|.
-        shrink = 1.0 - 2.0 ** (-cfg.quant_bits) - 2.0 ** (-cfg.quant_bits)
-        slack_f = slack_stat
-        slack_s = u32 * float(np.max(np.abs(x))) if x.size else 0.0
-        E_proj = E * shrink - slack_s
-        Delta_proj = Delta * shrink - slack_f
         if E_proj <= 0:
             raise ValueError(f"spatial bound E={E:g} below float32 representability for this data")
 
@@ -254,33 +321,26 @@ class FFCz:
         # iterations absorb the FFT round-off so the *shrunk* bounds hold in
         # float64, leaving the full quantization margin intact.
         eps_f = np.asarray(res.eps, dtype=np.float64)
-        eps_f, spat, freq = _polish_float64(eps_f, spat, freq, E_proj, np.asarray(Delta_proj, dtype=np.float64))
+        eps_f, spat, freq = polish_pocs_float64(
+            eps_f, spat, freq, E_proj, np.asarray(Delta_proj, dtype=np.float64)
+        )
 
-        # Adaptive quantization bit-widths.  The paper fixes m = 16 and shrinks
-        # each bound by (1 - 2^-m), which covers the *direct* quantization
-        # term.  Quantization noise also leaks across domains: K_s quantized
-        # spatial edits perturb every frequency component by up to
-        # K_s * E * 2^-m_s after the FFT, and the active frequency edits
-        # perturb every spatial point by up to (sqrt2/N) * sum(Delta_k) * 2^-m_f
-        # after the IFFT.  We widen each stream's m (beyond-paper refinement)
-        # so both the direct and the cross term fit inside the doubled shrink
-        # margin reserved above; K_s/K_f are known exactly post-projection, so
-        # this is a closed-form choice, not a search.
-        n_total = x.size
-        min_delta = float(np.min(Delta))
+        # Adaptive quantization bit-widths (beyond-paper refinement; the paper
+        # fixes m = 16 which covers only the direct term): K_s and the active
+        # weighted Delta sum are known exactly post-projection, so the widths
+        # come from the closed form in :func:`adaptive_quant_bits`.  The
+        # Delta sum runs over the *full* spectrum, so each active
+        # half-spectrum edit contributes with its conjugate-pair multiplicity.
         k_s = int(np.count_nonzero(spat))
-        sum_active_delta = float(np.sum(np.broadcast_to(np.asarray(Delta), freq.shape)[freq != 0]))
-        m_s = cfg.quant_bits
-        if k_s > 0 and min_delta > 0 and E > 0:
-            m_s = max(m_s, cfg.quant_bits + int(np.ceil(np.log2(max(k_s * E / min_delta, 1.0)))))
-        m_f = cfg.quant_bits
-        if sum_active_delta > 0 and E > 0:
-            ratio = np.sqrt(2.0) * sum_active_delta / (n_total * E)
-            m_f = max(m_f, cfg.quant_bits + int(np.ceil(np.log2(max(ratio, 1.0)))))
-        m_s, m_f = min(m_s, 48), min(m_f, 48)
+        pair_w = np.broadcast_to(np.asarray(rfft_pair_weights(x.shape)), freq.shape)
+        delta_b = np.broadcast_to(np.asarray(Delta), freq.shape)
+        sum_active_delta = float(np.sum((pair_w * delta_b)[freq != 0]))
+        m_s, m_f = adaptive_quant_bits(
+            cfg.quant_bits, k_s, E, float(np.min(Delta)), sum_active_delta, x.size
+        )
 
         se = encode_edits(spat, E, m=m_s, codec=cfg.codec)
-        fe = encode_edits(freq, Delta, m=m_f, codec=cfg.codec)
+        fe = encode_edits(freq, Delta, m=m_f, codec=cfg.codec, half_spectrum=True)
 
         blob = FFCzBlob(
             base_blob=base_blob,
@@ -296,7 +356,9 @@ class FFCz:
         if cfg.verify:
             x_final = self.decompress(blob)
             eps = x_final.astype(np.float64) - x.astype(np.float64)
-            d = np.fft.fftn(eps)
+            # half-spectrum check is exhaustive: every full-spectrum component
+            # shares |Re|/|Im| (and its Delta_k) with its conjugate image here
+            d = np.fft.rfftn(eps)
             spatial_margin = float(E - np.max(np.abs(eps)))
             freq_excess = np.maximum(np.abs(d.real), np.abs(d.imag)) - np.asarray(Delta)
             frequency_margin = float(-np.max(freq_excess))
@@ -316,14 +378,22 @@ class FFCz:
 
     def decompress(self, blob: FFCzBlob) -> np.ndarray:
         x_hat = np.asarray(self.base.decompress(blob.base_blob), dtype=np.float32)
+        half = blob.freq_edits.half_spectrum
         if blob.pointwise_delta is not None:
-            # pointwise Delta_k grid, stored in the blob (Observation 4 mode)
-            Delta = np.frombuffer(blob.pointwise_delta, dtype=np.float32).reshape(blob.shape)
+            # pointwise Delta_k grid, stored in the blob (Observation 4 mode);
+            # half-spectrum layout in rfft-era blobs, full grid in legacy ones
+            dshape = rfft_shape(blob.shape) if half else blob.shape
+            Delta = np.frombuffer(blob.pointwise_delta, dtype=np.float32).reshape(dshape)
         else:
             Delta = blob.Delta_scalar
         spat = decode_edits(blob.spat_edits, blob.E)
         freq = decode_edits(blob.freq_edits, Delta)
-        complete = spat + np.fft.ifftn(freq).real  # complete spatial edits (§IV-B)
+        if half:
+            freq_spatial = _irfftn(freq, blob.shape)
+        else:
+            # legacy full-spectrum blob (pre-rfft format flag)
+            freq_spatial = np.fft.ifftn(freq).real
+        complete = spat + freq_spatial  # complete spatial edits (§IV-B)
         return (x_hat.astype(np.float64) + complete).astype(np.float32)
 
     def roundtrip(self, x: np.ndarray):

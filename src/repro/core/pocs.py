@@ -9,6 +9,16 @@ FFTs.  The convergence check is *fused into* the f-cube projection (one pass
 over delta instead of the paper's two kernels) — a beyond-paper optimization
 mirrored in the Pallas kernel (:mod:`repro.kernels.fcube`).
 
+Hermitian rFFT fast path (default, ``use_rfft=True``): the error vector is
+real, so its spectrum is Hermitian-symmetric and the full complex ``fftn`` is
+redundant.  The loop state, the f-cube projection, the convergence check and
+the ``freq_edits`` accumulator all live on the ``rfftn`` half-spectrum (last
+axis ``N//2 + 1``), halving FFT flops and frequency-state HBM traffic per
+iteration.  Violation counts weight each half-spectrum component by its
+conjugate-pair multiplicity (:func:`repro.core.cubes.rfft_pair_weights`), so
+``final_violations`` keeps full-spectrum semantics.  ``use_rfft=False``
+retains the complex-FFT path as the oracle (tests bit-compare the two).
+
 Semantics match Alg. 1 exactly:
 
   eps <- x_hat - x                       (inside the s-cube by construction)
@@ -37,7 +47,14 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.cubes import fcube_violations, project_fcube, project_scube
+from repro.core.cubes import (
+    project_box_relaxed,
+    project_fcube,
+    project_fcube_relaxed,
+    project_scube,
+    rfft_pair_weights,
+    rfft_shape,
+)
 
 
 @jax.tree_util.register_dataclass
@@ -45,13 +62,15 @@ from repro.core.cubes import fcube_violations, project_fcube, project_scube
 class AlternatingProjectionResult:
     eps: Any  # final spatial error vector (inside s-cube; inside f-cube if converged)
     spat_edits: Any  # accumulated displacement along the spatial basis (real)
-    freq_edits: Any  # accumulated displacement along the frequency basis (complex)
+    # accumulated displacement along the frequency basis (complex); rfft
+    # half-spectrum layout (last axis N//2+1) when use_rfft, else full spectrum
+    freq_edits: Any
     iterations: Any  # int32 iteration count
     converged: Any  # bool: inside both cubes
     final_violations: Any  # int32: f-cube violations at exit (0 if converged)
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters", "use_kernels", "relax"))
+@functools.partial(jax.jit, static_argnames=("max_iters", "use_kernels", "relax", "use_rfft"))
 def alternating_projection(
     eps0: jnp.ndarray,
     E,
@@ -60,12 +79,17 @@ def alternating_projection(
     use_kernels: bool = False,
     relax: float = 1.0,
     check_slack=0.0,
+    use_rfft: bool = True,
 ) -> AlternatingProjectionResult:
     """Run Alg. 1 from an initial spatial error vector ``eps0``.
 
     Args:
       eps0: x_hat - x from the base compressor (any rank, real dtype).
       E, Delta: scalar or broadcastable pointwise bounds (see core.bounds).
+        Under ``use_rfft`` a pointwise ``Delta`` may be given either on the
+        half-spectrum (``rfft_shape(eps0.shape)``) or on the full spectrum
+        (``eps0.shape`` — sliced to the half-spectrum, exact for the
+        Hermitian-symmetric grids ``core.bounds`` produces).
       max_iters: POCS iteration cap.
       use_kernels: route projections through the Pallas TPU kernels
         (``repro.kernels``) instead of the pure-jnp oracles.
@@ -76,39 +100,96 @@ def alternating_projection(
         paper-faithful plain alternating projection; 1.0 < relax < 2.0
         preserves Fejer monotonicity (convergence) for convex sets.  The
         final iterate is still an exact f-cube projection, so feasibility
-        guarantees are unchanged.
+        guarantees are unchanged.  For a box both projections collapse into
+        the closed-form one-clip pass of ``project_box_relaxed``.
+      use_rfft: run the loop on the Hermitian half-spectrum (the fast path;
+        ``freq_edits`` then has rfft layout).  False keeps the full
+        complex-FFT oracle.
 
     Returns an :class:`AlternatingProjectionResult` pytree.
     """
+    eps0 = jnp.asarray(eps0)
+    cdtype = jnp.complex64 if eps0.dtype != jnp.float64 else jnp.complex128
+    E = jnp.asarray(E, dtype=eps0.dtype)
+    Delta_r = jnp.asarray(Delta, dtype=eps0.real.dtype)
+
+    shape = eps0.shape
+    if use_rfft:
+        # pair weights are only consumed by the fused kernel's reduction;
+        # the jnp branch uses the cheaper 2*sum - self-conjugate-planes form
+        weights = rfft_pair_weights(shape) if use_kernels else None
+        if Delta_r.ndim and Delta_r.shape == shape:
+            # full-spectrum pointwise grid: Hermitian-symmetric by contract,
+            # so the rfft half-plane slice is exact
+            Delta_r = Delta_r[..., : shape[-1] // 2 + 1]
+        freq_shape = rfft_shape(shape)
+        fwd = lambda e: jnp.fft.rfftn(e).astype(cdtype)  # noqa: E731
+        inv = lambda d: jnp.fft.irfftn(d, s=shape).astype(eps0.dtype)  # noqa: E731
+    else:
+        weights = None
+        freq_shape = shape
+        fwd = lambda e: jnp.fft.fftn(e).astype(cdtype)  # noqa: E731
+        inv = lambda d: jnp.real(jnp.fft.ifftn(d)).astype(eps0.dtype)  # noqa: E731
+
+    # Convergence test uses a float32-resolution tolerance: below
+    # ~1e-5 relative the float32 FFT round-trip oscillates and cannot
+    # make progress; the exact float64 polish in FFCz.compress owns the
+    # last digits (its workload is O(tolerance), i.e. negligible).
+    _CHECK_TOL = 1e-5
+
     if use_kernels:
         from repro.kernels.fcube import ops as fcube_ops
         from repro.kernels.scube import ops as scube_ops
 
-        f_project = functools.partial(fcube_ops.project_fcube_fused, check_tol=1e-5)
-        s_project = scube_ops.project_scube_fused
+        def f_project(delta, Delta):
+            clipped, disp, viol = fcube_ops.project_fcube_fused(
+                delta, Delta, weight=weights, check_tol=_CHECK_TOL, check_slack=check_slack
+            )
+            if relax != 1.0:
+                clipped, _ = project_fcube(delta + relax * disp, Delta)
+                disp = clipped - delta
+            return clipped, disp, viol
+
+        def s_project(eps, E):
+            clipped, disp = scube_ops.project_scube_fused(eps, E)
+            if relax != 1.0:
+                clipped = jnp.clip(eps + relax * disp, -E, E)
+                disp = clipped - eps
+            return clipped, disp
     else:
-        # Convergence test uses a float32-resolution tolerance: below
-        # ~1e-5 relative the float32 FFT round-trip oscillates and cannot
-        # make progress; the exact float64 polish in FFCz.compress owns the
-        # last digits (its workload is O(tolerance), i.e. negligible).
-        _CHECK_TOL = 1e-5
+
+        # Static layout facts for the cheap half-spectrum count below: the
+        # last-axis k=0 plane (and the Nyquist plane for even N) is
+        # self-conjugate and counts once; every other component stands for a
+        # conjugate pair and counts twice.
+        has_nyquist = use_rfft and shape and shape[-1] % 2 == 0 and shape[-1] // 2 + 1 > 1
 
         def f_project(delta, Delta):
             # check_slack: absolute float32-noise allowance for tiny
             # pointwise Delta_k (the caller reserves >= 2x this in its
             # bound shrink, and the float64 polish closes the gap exactly)
-            viol = fcube_violations(delta, Delta * (1.0 + _CHECK_TOL) + check_slack)
-            clipped, disp = project_fcube(delta, Delta)
-            return clipped, disp, viol
+            dt = Delta * (1.0 + _CHECK_TOL) + check_slack
+            vb = (jnp.abs(delta.real) > dt) | (jnp.abs(delta.imag) > dt)
+            if use_rfft:
+                # full-spectrum count without a weight-plane multiply:
+                # 2 * total - (self-conjugate planes counted twice in it)
+                viol = 2 * jnp.sum(vb) - jnp.sum(vb[..., 0])
+                if has_nyquist:
+                    viol = viol - jnp.sum(vb[..., -1])
+            else:
+                viol = jnp.sum(vb)
+            if relax == 1.0:
+                clipped, disp = project_fcube(delta, Delta)
+            else:
+                clipped = project_fcube_relaxed(delta, Delta, relax)
+                disp = clipped - delta
+            return clipped, disp, viol.astype(jnp.int32)
 
         def s_project(eps, E):
-            clipped, disp = project_scube(eps, E)
-            return clipped, disp
-
-    eps0 = jnp.asarray(eps0)
-    cdtype = jnp.complex64 if eps0.dtype != jnp.float64 else jnp.complex128
-    E = jnp.asarray(E, dtype=eps0.dtype)
-    Delta_r = jnp.asarray(Delta, dtype=eps0.real.dtype)
+            if relax == 1.0:
+                return project_scube(eps, E)
+            clipped = project_box_relaxed(eps, E, relax)
+            return clipped, clipped - eps
 
     def cond(state):
         _eps, _se, _fe, it, done, _viol = state
@@ -116,25 +197,15 @@ def alternating_projection(
 
     def body(state):
         eps, spat_edits, freq_edits, it, _done, _viol = state
-        delta = jnp.fft.fftn(eps).astype(cdtype)
+        delta = fwd(eps)
         clipped, f_disp, viol = f_project(delta, Delta_r)
-        if relax != 1.0:
-            # over-relax then re-project: still inside the f-cube, but
-            # violating components land in the interior, not on the face
-            over = delta + relax * f_disp
-            clipped, _, _ = f_project(over, Delta_r)
-            f_disp = clipped - delta
         done = viol == 0
         # When already inside the f-cube, the displacement is zero and the
         # projections below are no-ops; masking keeps the loop branch-free
         # (matches the GPU implementation, which exits before projecting).
         freq_edits = freq_edits + jnp.where(done, 0, 1) * f_disp
-        eps_f = jnp.real(jnp.fft.ifftn(clipped)).astype(eps.dtype)
+        eps_f = inv(clipped)
         eps_s, s_disp = s_project(eps_f, E)
-        if relax != 1.0:
-            over_s = eps_f + relax * s_disp
-            eps_s, _ = s_project(over_s, E)
-            s_disp = eps_s - eps_f
         spat_edits = spat_edits + jnp.where(done, 0, 1) * s_disp
         eps_next = jnp.where(done, eps, eps_s)
         return (eps_next, spat_edits, freq_edits, it + 1, done, viol)
@@ -142,7 +213,7 @@ def alternating_projection(
     state0 = (
         eps0,
         jnp.zeros_like(eps0),
-        jnp.zeros(eps0.shape, dtype=cdtype),
+        jnp.zeros(freq_shape, dtype=cdtype),
         jnp.int32(0),
         jnp.bool_(False),
         jnp.int32(-1),

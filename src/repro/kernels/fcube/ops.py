@@ -4,6 +4,10 @@ Handles flattening an arbitrary-rank complex frequency-error tensor into the
 (rows, 128) float planes the kernel tiles, padding (with in-bound zeros so
 padded lanes never count as violations), and reassembly.  On CPU the kernel
 runs in interpret mode; on TPU it compiles via Mosaic.
+
+The rFFT fast path passes a conjugate-pair ``weight`` plane (see
+``core.cubes.rfft_pair_weights``); padded weight lanes are 0, so the fused
+violation reduction stays exact over the half-spectrum.
 """
 
 from __future__ import annotations
@@ -40,11 +44,19 @@ def _untile(t: jnp.ndarray, shape, pad: int):
 def project_fcube_fused(
     delta: jnp.ndarray,
     Delta,
+    weight=None,
     block_rows: int = BLOCK_ROWS,
     interpret: bool | None = None,
     check_tol: float = 0.0,
+    check_slack=0.0,
 ):
     """Drop-in replacement for core.cubes.project_fcube + fcube_violations.
+
+    ``weight``: optional int pair-weight array broadcastable to
+    ``delta.shape`` (rfft half-spectrum counting); None counts each
+    component once.  ``check_slack``: absolute allowance added to the
+    convergence bound (matches the pure-jnp oracle's float32-noise slack
+    for near-floor pointwise Delta_k).
 
     Returns (clipped complex, displacement complex, violation count int32).
     """
@@ -63,9 +75,17 @@ def project_fcube_fused(
             dt = flat.reshape(-1, LANES)
     else:
         dt = Delta_arr.reshape(1, 1)
+    weighted = weight is not None
+    if weighted:
+        w = jnp.broadcast_to(jnp.asarray(weight, dtype=jnp.int32), shape)
+        # zero-pad: padded lanes carry weight 0 and never count
+        wt, _ = _tile(w, block_rows)
+    else:
+        wt = jnp.ones((1, 1), dtype=jnp.int32)
+    slk = jnp.asarray(check_slack, dtype=jnp.float32).reshape(1, 1)
     cr, ci, er, ei, viol = fcube_pallas(
-        re, im, dt, pointwise=pointwise, interpret=interpret, block_rows=block_rows,
-        check_tol=check_tol,
+        re, im, dt, wt, slk, pointwise=pointwise, weighted=weighted, interpret=interpret,
+        block_rows=block_rows, check_tol=check_tol,
     )
     clipped = (_untile(cr, shape, pad) + 1j * _untile(ci, shape, pad)).astype(delta.dtype)
     edits = (_untile(er, shape, pad) + 1j * _untile(ei, shape, pad)).astype(delta.dtype)

@@ -5,13 +5,19 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def project_fcube_fused_ref(delta: jnp.ndarray, Delta):
+def project_fcube_fused_ref(delta: jnp.ndarray, Delta, weight=None):
     """Clip complex frequency errors to +-Delta (Re/Im independently), return
     (clipped, displacement, violation_count).
 
     ``Delta`` is a scalar or an array broadcastable to ``delta.shape``.
+    ``weight`` optionally scales each component's violation contribution
+    (rfft half-spectrum pair multiplicities).
     """
-    viol = jnp.sum((jnp.abs(delta.real) > Delta) | (jnp.abs(delta.imag) > Delta))
+    ind = (jnp.abs(delta.real) > Delta) | (jnp.abs(delta.imag) > Delta)
+    if weight is None:
+        viol = jnp.sum(ind)
+    else:
+        viol = jnp.sum(ind.astype(jnp.int32) * jnp.asarray(weight, dtype=jnp.int32))
     re = jnp.clip(delta.real, -Delta, Delta)
     im = jnp.clip(delta.imag, -Delta, Delta)
     clipped = (re + 1j * im).astype(delta.dtype)

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.blockwise import blockwise_correct
+from repro.core.blockwise import correct_batch
 
 
 def _quantize_dequantize(g: jnp.ndarray, bits: int, E_rel: float):
@@ -57,20 +57,39 @@ def compress_gradients(
     spatial |err| <= E and |Re/Im FFT(err)| <= Delta, with
     E = E_rel * max|g| and Delta = Delta_rel * N_block * E (frequency errors
     of a length-N pencil live on a N*E scale).
-    """
 
-    def one(g):
+    All tensors of the gradient pytree are corrected by batched
+    :func:`repro.core.blockwise.correct_batch` device calls — one per
+    distinct effective pencil length (tensors smaller than ``block`` keep
+    their tighter ``size``-length pencil) — instead of one dispatch per
+    tensor.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    work = []  # (leaf_idx, err, E, Delta, effective block)
+    for i, g in enumerate(leaves):
         if g.size < 2:
-            return g
+            continue
         gq, _codes, _step = _quantize_dequantize(g, bits, E_rel)
         err = (gq - g).astype(jnp.float32)
         gmax = jnp.max(jnp.abs(g.astype(jnp.float32)))
         E = E_rel * gmax
         Delta = Delta_rel * block * E
-        corrected = blockwise_correct(err, E, Delta, block=min(block, max(g.size, 2)), max_iters=max_iters)
-        return (g.astype(jnp.float32) + corrected).astype(g.dtype)
+        work.append((i, err, E, Delta, min(block, max(g.size, 2))))
 
-    return jax.tree.map(one, grads)
+    out = list(leaves)
+    for blk in sorted({w[4] for w in work}):
+        group = [w for w in work if w[4] == blk]
+        corrected, _stats = correct_batch(
+            [w[1] for w in group],
+            [w[2] for w in group],
+            [w[3] for w in group],
+            block=blk,
+            max_iters=max_iters,
+        )
+        for (i, _err, _E, _D, _b), corr in zip(group, corrected):
+            g = leaves[i]
+            out[i] = (g.astype(jnp.float32) + corr).astype(g.dtype)
+    return jax.tree.unflatten(treedef, out)
 
 
 def compressed_psum(x: jnp.ndarray, mesh, axis: str = "data", *, bits: int = 8, E_rel: float = 1e-2):

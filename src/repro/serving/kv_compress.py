@@ -8,6 +8,12 @@ attention scores integrate over — within Delta.  The engine stores the
 quantize+correct round-trip (memory model: codes at ``bits``/value + sparse
 edits); tests verify both bounds and end-to-end logit drift.
 
+Multi-tenant batching: ``compress_cache`` no longer dispatches one corrector
+per layer/leaf — every K/V sub-tensor in the cache pytree is quantized, then
+ALL quantization-error tensors go through a single
+:func:`repro.core.blockwise.correct_batch` device program (donated packed
+buffer, per-instance bounds and convergence masking).
+
 Inapplicable to attention-free archs (mamba2: no KV cache; SSM state is tiny
 and kept exact) — noted in DESIGN.md §Arch-applicability.
 """
@@ -20,7 +26,26 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.blockwise import blockwise_correct
+from repro.core.blockwise import correct_batch
+
+
+def _quantize_pencils(kv: jnp.ndarray, bits: int, E_rel: float, batched: bool = False):
+    """Swap to (..., hd, S) pencils and quantize; returns (xt, err, E).
+
+    With ``batched`` the leading axis indexes independent sub-tensors, each
+    quantized against its own amax (``E`` is then a vector).  The frequency
+    bound is the caller's: Delta = Delta_rel * block * E.
+    """
+    x = kv.astype(jnp.float32)
+    xt = jnp.swapaxes(x, -2, -1)  # pencils over the sequence dim
+    reduce_axes = tuple(range(1, xt.ndim)) if batched else None
+    amax = jnp.max(jnp.abs(xt), axis=reduce_axes)
+    E = E_rel * jnp.maximum(amax, 1e-30)
+    step = 2.0 * E / (2.0**bits)
+    if batched:
+        step = step.reshape((-1,) + (1,) * (xt.ndim - 1))
+    q = jnp.rint(xt / step) * step
+    return xt, q - xt, E
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "block", "max_iters"))
@@ -34,33 +59,55 @@ def compress_kv_tensor(
     max_iters: int = 8,
 ) -> jnp.ndarray:
     """Quantize + FFCz-correct a KV tensor; returns the lossy round-trip."""
-    x = kv.astype(jnp.float32)
-    # blocks along the sequence dim: (b, hkv, S, hd) -> pencils over S
-    xt = jnp.swapaxes(x, 2, 3)  # (b, hkv, hd, S)
-    amax = jnp.max(jnp.abs(xt))
-    E = E_rel * jnp.maximum(amax, 1e-30)
-    step = 2.0 * E / (2.0**bits)
-    q = jnp.rint(xt / step) * step
-    err = q - xt
+    xt, err, E = _quantize_pencils(kv, bits, E_rel)
     Delta = Delta_rel * block * E
-    corrected_err = blockwise_correct(err, E, Delta, block=block, max_iters=max_iters)
-    out = jnp.swapaxes(xt + corrected_err, 2, 3)
+    [corrected_err], _stats = correct_batch([err], E, Delta, block=block, max_iters=max_iters)
+    out = jnp.swapaxes(xt + corrected_err, -2, -1)
     return out.astype(kv.dtype)
 
 
-def compress_cache(cache: Any, comp) -> Any:
-    """Apply KV compression to every k/v leaf of a cache pytree."""
+def compress_cache(
+    cache: Any, comp, *, bits: int = 8, block: int = 1024, max_iters: int = 8
+) -> Any:
+    """Apply KV compression to every k/v leaf of a cache pytree.
 
-    def visit(path, leaf):
+    All layers'/leaves' quantization errors are corrected by ONE batched
+    device call (per-sub-tensor E/Delta, per-instance convergence), instead
+    of a jit dispatch per leaf.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    kv_idx = []
+    for i, (path, leaf) in enumerate(flat):
         names = [str(p.key) for p in path if hasattr(p, "key")]
-        if names and names[-1] in ("k", "v") and leaf.ndim >= 4:
-            flat = leaf.reshape((-1,) + leaf.shape[-4:]) if leaf.ndim > 4 else leaf[None]
-            out = jax.vmap(
-                lambda t: compress_kv_tensor(
-                    t, bits=8, E_rel=comp.kv_E_rel, Delta_rel=comp.kv_Delta_rel
-                )
-            )(flat)
-            return out.reshape(leaf.shape)
-        return leaf
+        if names and names[-1] in ("k", "v") and getattr(leaf, "ndim", 0) >= 4:
+            kv_idx.append(i)
+    if not kv_idx:
+        return cache
 
-    return jax.tree_util.tree_map_with_path(visit, cache)
+    # quantize each leaf's sub-tensors in one vectorized pass (per-sub E from
+    # a leading-axis-preserving amax), batch the POCS across everything.
+    # Only the error tensors cross into the batched call (those buffers are
+    # donated); the transposed float32 views are recomputed at assembly so
+    # peak memory stays ~one cache copy.
+    prepped = []  # (leaf_idx, n_sub, errs-list start, leaf shape, leaf dtype)
+    errs, Es, Ds = [], [], []
+    for i in kv_idx:
+        leaf = flat[i][1]
+        sub = leaf.reshape((-1,) + leaf.shape[-4:]) if leaf.ndim > 4 else leaf[None]
+        start = len(errs)
+        _xt, err, E = _quantize_pencils(sub, bits, comp.kv_E_rel, batched=True)
+        errs.extend(err[j] for j in range(err.shape[0]))
+        Es.extend(E[j] for j in range(E.shape[0]))
+        Ds.extend(comp.kv_Delta_rel * block * E[j] for j in range(E.shape[0]))
+        prepped.append((i, sub.shape[0], start, leaf.shape, leaf.dtype))
+
+    corrected, _stats = correct_batch(errs, Es, Ds, block=block, max_iters=max_iters)
+
+    leaves = [leaf for _, leaf in flat]
+    for i, n_sub, start, shape, dtype in prepped:
+        leaf = leaves[i]
+        sub = leaf.reshape((-1,) + leaf.shape[-4:]) if leaf.ndim > 4 else leaf[None]
+        xt = jnp.swapaxes(sub.astype(jnp.float32), -2, -1)
+        corr = jnp.stack([corrected[start + j] for j in range(n_sub)])
+        leaves[i] = jnp.swapaxes(xt + corr, -2, -1).reshape(shape).astype(dtype)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

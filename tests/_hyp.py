@@ -1,0 +1,25 @@
+"""Optional-hypothesis shim: property tests skip (not error) when absent.
+
+``from _hyp import given, settings, st`` gives the real hypothesis API when
+it is installed (see requirements-dev.txt).  Without it, ``@given`` turns the
+test into a skip and ``st.*`` strategy builders become inert placeholders, so
+plain unit tests in the same module keep running — the suite degrades to
+skips instead of dying at collection.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ModuleNotFoundError:
+    import pytest
+
+    class _InertStrategies:
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _InertStrategies()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed (see requirements-dev.txt)")
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

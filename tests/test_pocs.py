@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or skip-stubs (requirements-dev.txt)
 
 from repro.core.cubes import fcube_violations, project_fcube, project_scube
 from repro.core.pocs import alternating_projection
@@ -58,12 +58,15 @@ class TestAlternatingProjection:
         assert _feasible(res.eps, E, Delta)
 
     def test_edit_identity(self, rng):
-        """eps_final == eps0 + IFFT(freq_edits) + spat_edits (decoder contract)."""
+        """eps_final == eps0 + IRFFT(freq_edits) + spat_edits (decoder contract).
+
+        freq_edits live on the rfft half-spectrum (the Hermitian fast path).
+        """
         E = 0.1
         eps0 = np.clip(rng.standard_normal(512) * 0.05, -E, E).astype(np.float32)
         Delta = 0.5 * np.abs(np.fft.fft(eps0)).max()
         res = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=500)
-        recon = eps0 + np.fft.ifft(np.asarray(res.freq_edits)).real + np.asarray(res.spat_edits)
+        recon = eps0 + np.fft.irfft(np.asarray(res.freq_edits), n=512) + np.asarray(res.spat_edits)
         assert np.abs(recon - np.asarray(res.eps)).max() < 1e-4
 
     def test_inside_fcube_one_iteration(self, rng):

@@ -43,5 +43,5 @@ class TestRelaxedPOCS:
         eps0 = np.clip(rng.standard_normal(256) * 0.05, -E, E).astype(np.float32)
         Delta = 0.5 * np.abs(np.fft.fft(eps0)).max()
         res = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=500, relax=1.3)
-        recon = eps0 + np.fft.ifft(np.asarray(res.freq_edits)).real + np.asarray(res.spat_edits)
+        recon = eps0 + np.fft.irfft(np.asarray(res.freq_edits), n=eps0.size) + np.asarray(res.spat_edits)
         assert np.abs(recon - np.asarray(res.eps)).max() < 1e-4

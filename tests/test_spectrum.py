@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or skip-stubs (requirements-dev.txt)
 
 from repro.core.bounds import power_spectrum_delta, resolve_bounds
 from repro.core.spectrum import (
