@@ -1,11 +1,17 @@
 """POCS core throughput: complex-FFT oracle vs Hermitian rFFT fast path,
-single-field vs batched multi-tenant correction.
+single-field vs batched multi-tenant correction, engine device path vs the
+legacy host-numpy loop, and batched vs sharded engine backends.
 
 Emits ``BENCH_pocs.json`` (repo root / cwd) with iterations/s and MB/s per
 configuration — the anchor for the rFFT fast-path speedup claimed in
-ROADMAP.  Both paths run the *same* iteration count (a deliberately
-infeasible-in-N-iterations bound configuration), so wall-clock ratios are
-per-iteration ratios.
+ROADMAP.  Both paths of each pair run the *same* iteration count (a
+deliberately infeasible-in-N-iterations bound configuration), so wall-clock
+ratios are per-iteration ratios.
+
+The sharded-backend case needs >1 device, so it runs in a subprocess with
+``--xla_force_host_platform_device_count`` set (fake CPU devices share the
+same physical cores, so the row measures shard_map overhead/parity on CPU;
+real distribution wins land on a multi-chip mesh).
 
 Usage:  PYTHONPATH=src python benchmarks/bench_pocs.py [--quick]
 """
@@ -14,6 +20,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -59,13 +68,7 @@ def bench_single(shape, max_iters: int, repeat: int):
     ``max_iters`` cap both paths run *exactly* ``max_iters`` iterations and
     wall-clock ratios are per-iteration ratios.
     """
-    rng = np.random.default_rng(0)
-    E = 0.05
-    sgn = np.where(rng.random(shape) < 0.52, 1.0, -1.0)
-    eps0_np = (E * sgn * (1 - 1e-4 * rng.random(shape))).astype(np.float32)
-    F = np.abs(np.fft.fftn(eps0_np))
-    Delta_np = (1e9 * np.ones(shape)).astype(np.float32)
-    Delta_np.reshape(-1)[0] = 0.01 * F.reshape(-1)[0]
+    eps0_np, E, Delta_np = _adversarial_field(shape)
     eps0 = jnp.asarray(eps0_np)
     Delta = jnp.asarray(Delta_np)
 
@@ -142,11 +145,153 @@ def bench_batched(n_tensors: int, size: int, block: int, max_iters: int, repeat:
     ], speedup
 
 
+def _adversarial_field(shape, E=0.05):
+    """The forced-iteration workload of bench_single (see its docstring)."""
+    rng = np.random.default_rng(0)
+    sgn = np.where(rng.random(shape) < 0.52, 1.0, -1.0)
+    eps0 = (E * sgn * (1 - 1e-4 * rng.random(shape))).astype(np.float32)
+    F = np.abs(np.fft.fftn(eps0))
+    Delta = (1e9 * np.ones(shape)).astype(np.float32)
+    Delta.reshape(-1)[0] = 0.01 * F.reshape(-1)[0]
+    return eps0, E, Delta
+
+
+def bench_engine_field(shape, max_iters: int, repeat: int):
+    """Engine EXECUTE device program vs a host-numpy POCS oracle loop.
+
+    NOT a before/after of the engine refactor: the POCS loop was already a
+    jitted device program pre-engine (only bound resolution and the polish
+    lived on host).  This row anchors what a host-orchestrated numpy loop —
+    the paper's CPU reference shape, and the style of the float64 polish —
+    costs per iteration relative to the device-resident program, i.e. the
+    price of ever falling off the device path.  Both sides run exactly
+    ``max_iters`` iterations on the adversarial field (the exact float64
+    polish is excluded: its cost is O(convergence residual) in production,
+    and the forced-iteration workload is deliberately never convergent).
+    """
+    eps0_np, E, Delta_np = _adversarial_field(shape)
+    Delta_half = Delta_np[..., : shape[-1] // 2 + 1]
+    eps0 = jnp.asarray(eps0_np)
+    Delta = jnp.asarray(Delta_np)
+
+    def host_loop():
+        # host-numpy oracle: the same rfft loop at float32 storage
+        eps = eps0_np
+        for _ in range(max_iters):
+            d = np.fft.rfftn(eps)
+            clipped = np.clip(d.real, -Delta_half, Delta_half) + 1j * np.clip(
+                d.imag, -Delta_half, Delta_half
+            )
+            eps = np.clip(
+                np.fft.irfftn(clipped, s=shape, axes=tuple(range(len(shape)))), -E, E
+            ).astype(np.float32)
+        return eps
+
+    def engine_device():
+        return alternating_projection(eps0, E, Delta, max_iters=max_iters).eps
+
+    res = alternating_projection(eps0, E, Delta, max_iters=max_iters)
+    assert int(res.iterations) == max_iters, "retune the bench"
+    t_host, t_dev = _bench_pair(host_loop, engine_device, repeat)
+    mb = eps0.size * 4 / 1e6
+    speedup = t_host / t_dev
+    rows = [
+        {
+            "bench": "engine_field",
+            "path": path,
+            "shape": list(shape),
+            "iterations": max_iters,
+            "wall_s": t,
+            "iters_per_s": max_iters / t,
+            "mb_per_s": mb * max_iters / t,
+            "speedup_engine_vs_host": speedup,
+        }
+        for path, t in (("host-numpy-oracle", t_host), ("engine-device", t_dev))
+    ]
+    return rows, speedup
+
+
+_BACKEND_CHILD = "--_backend-child"
+
+
+def bench_backends_child(n_devices: int, n_tensors: int, size: int, block: int, max_iters: int, repeat: int):
+    """Runs inside the multi-device subprocess: batched vs sharded backend."""
+    from repro.core.engine import CorrectionEngine
+
+    rng = np.random.default_rng(1)
+    tensors_np = [rng.standard_normal(size).astype(np.float32) * 0.01 for _ in range(n_tensors)]
+    E, Delta = 0.02, 0.02
+    eng_b = CorrectionEngine("batched")
+    eng_s = CorrectionEngine("sharded")
+
+    t_b, t_s = _bench_pair(
+        lambda: eng_b.correct(tensors_np, E, Delta, block=block, max_iters=max_iters)[0],
+        lambda: eng_s.correct(tensors_np, E, Delta, block=block, max_iters=max_iters)[0],
+        repeat,
+    )
+    mb = n_tensors * size * 4 / 1e6
+    ratio = t_b / t_s
+    return [
+        {
+            "bench": "backend",
+            "path": path,
+            "n_devices": n_devices,
+            "n_tensors": n_tensors,
+            "size": size,
+            "block": block,
+            "wall_s": t,
+            "mb_per_s": mb / t,
+            "speedup_sharded_vs_batched": ratio,
+        }
+        for path, t in (("batched", t_b), ("sharded", t_s))
+    ]
+
+
+def bench_backends(n_devices: int, quick: bool):
+    """Spawn the sharded-vs-batched comparison on a fake multi-device mesh
+    (XLA_FLAGS must be set before jax import, hence the subprocess)."""
+    env = dict(os.environ)
+    # append so caller-supplied compiler flags apply to this row too
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + f" --xla_force_host_platform_device_count={n_devices}"
+    ).strip()
+    cmd = [sys.executable, os.path.abspath(__file__), _BACKEND_CHILD, str(n_devices)]
+    if quick:
+        cmd.append("--quick")
+    try:
+        proc = subprocess.run(capture_output=True, text=True, env=env, args=cmd, timeout=600)
+    except subprocess.TimeoutExpired:
+        print("backend bench subprocess timed out; skipping the backend rows")
+        return []
+    if proc.returncode != 0:
+        print(f"backend bench subprocess failed:\n{proc.stderr[-2000:]}")
+        return []
+    lines = [l for l in proc.stdout.splitlines() if l.startswith("ROWS:")]
+    if not lines:
+        print("backend bench subprocess produced no ROWS line; skipping")
+        return []
+    return json.loads(lines[0][len("ROWS:"):])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="smaller shapes / fewer repeats")
     ap.add_argument("--out", default="BENCH_pocs.json")
+    ap.add_argument(_BACKEND_CHILD, type=int, default=0, dest="backend_child", help=argparse.SUPPRESS)
+    ap.add_argument("--devices", type=int, default=8, help="fake device count for the sharded-backend case")
     args = ap.parse_args()
+
+    if args.backend_child:
+        rows = bench_backends_child(
+            n_devices=args.backend_child,
+            n_tensors=16 if args.quick else 64,
+            size=4096,
+            block=4096,
+            max_iters=8,
+            repeat=3 if args.quick else 16,
+        )
+        print("ROWS:" + json.dumps(rows))
+        return
 
     repeat = 3 if args.quick else 16
     max_iters = 8 if args.quick else 20  # below the config's ~22-iteration natural count
@@ -159,6 +304,10 @@ def main():
         r, s = bench_single(shape, max_iters, repeat)
         rows += r
         print(f"single {shape}: rfft vs complex speedup = {s:.2f}x")
+    for shape in shapes:
+        r, s = bench_engine_field(shape, max_iters, repeat)
+        rows += r
+        print(f"engine {shape}: device execute vs host-numpy oracle = {s:.2f}x")
     # Multi-tenant regime: many small tensors, one block each.  On CPU this
     # lands at ~parity (XLA dispatch is cheap there); the point of
     # correct_batch is eliminating per-tensor dispatch + host sync on
@@ -172,6 +321,13 @@ def main():
     )
     rows += br
     print(f"batched: correct_batch vs per-tensor loop speedup = {bs:.2f}x")
+    backend_rows = bench_backends(args.devices, args.quick)
+    rows += backend_rows
+    if backend_rows:
+        print(
+            f"backends ({args.devices} fake devices): sharded vs batched = "
+            f"{backend_rows[0]['speedup_sharded_vs_batched']:.2f}x"
+        )
 
     meta = {
         "backend": jax.default_backend(),

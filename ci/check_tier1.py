@@ -1,10 +1,11 @@
-"""Tier-1 gate for CI: run the ROADMAP test command and fail only on NEW
-failures (regressions) relative to ci/known_failures.txt.
+"""Tier-1 gate for CI: run the ROADMAP test command and fail on NEW failures
+(regressions) relative to ci/known_failures.txt — AND on stale entries
+(known failures that now pass), so the list can only shrink.
 
-Known failures are environment-dependent seed-era issues (flash-attention
-kernel tolerances on CPU, distributed subprocess tests, ...) tracked for
-burn-down; anything not on the list fails the build, and tests that start
-passing are reported so the list can shrink.
+Known failures are environment-dependent seed-era issues tracked for
+burn-down; anything not on the list fails the build, and a list entry that
+passes fails the build too, forcing the entry to be pruned in the same
+change that fixed it (otherwise the list silently stops gating the test).
 
 Usage:  PYTHONPATH=src python ci/check_tier1.py
 """
@@ -52,17 +53,20 @@ def main() -> int:
 
     new = sorted(failed - known)
     fixed = sorted(known - failed)
+    rc = 0
     if fixed:
-        print(f"\n{len(fixed)} known failure(s) now pass — prune ci/known_failures.txt:")
+        print(f"\nSTALE: {len(fixed)} known failure(s) now pass — prune ci/known_failures.txt:")
         for t in fixed:
             print(f"  {t}")
+        rc = 1
     if new:
         print(f"\nREGRESSION: {len(new)} new failing test(s):")
         for t in new:
             print(f"  {t}")
-        return 1
-    print(f"\ntier-1 OK: {len(failed)} failures, all known ({len(known)} on the list)")
-    return 0
+        rc = 1
+    if rc == 0:
+        print(f"\ntier-1 OK: {len(failed)} failures, all known ({len(known)} on the list)")
+    return rc
 
 
 if __name__ == "__main__":

@@ -6,20 +6,22 @@ quality), the frequency bound preserves each tensor's spectrum — for weight
 matrices that is the quantity tied to the layer's singular-value structure.
 Non-float / tiny arrays pass through raw.
 
-Two encode paths share the wire envelope:
+Both encode paths are clients of :class:`repro.core.engine.CorrectionEngine`
+and share the wire envelope; this module owns ONLY workload shaping and byte
+assembly (bound discipline, POCS, bit-width and pair-weight math all live in
+the engine):
 
-``encode``        — tag ``F``: whole-array FFCz (the paper pipeline; the
-                    frequency bound applies to the array's global spectrum).
+``encode``        — tag ``F``: whole-array FFCz (the paper pipeline via
+                    :class:`repro.core.ffcz.FFCz`; the frequency bound
+                    applies to the array's global spectrum).
 ``encode_batch``  — tag ``B``: blockwise FFCz for a whole checkpoint at
-                    once.  Every eligible leaf's base-compression error is
-                    tiled into ``block``-length pencils and ALL leaves are
-                    corrected by a single batched device program
-                    (:func:`repro.core.blockwise.correct_batch`) — the
-                    frequency bound then applies per pencil, arrays of any
-                    rank are supported (no >3-D FFT limits), and saving a
-                    many-tensor training state stops paying one POCS
-                    dispatch per tensor.  Edits are stored as rfft
-                    half-spectrum streams.
+                    once.  Per leaf, ``engine.plan_pencils`` resolves the
+                    per-pencil bounds, then ALL leaves' base-compression
+                    errors are corrected by a single batched (or, with a
+                    sharded engine, ``shard_map``-distributed) device
+                    program via ``engine.correct``, and
+                    ``engine.encode_pencils`` polishes + serializes each
+                    leaf's rfft half-spectrum edit streams.
 
 Both tags decode through :meth:`CheckpointCodec.decode`; raw arrays use
 tag ``R``.
@@ -29,23 +31,14 @@ from __future__ import annotations
 
 import io
 import struct
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.coding.quantize import DEFAULT_QUANT_BITS
 from repro.compressors import get_compressor
-from repro.core.blockwise import correct_batch
-from repro.core.cubes import rfft_pair_weights
-from repro.core.edits import EncodedEdits, decode_edits, encode_edits
-from repro.core.ffcz import (
-    FFCz,
-    FFCzBlob,
-    FFCzConfig,
-    adaptive_quant_bits,
-    float32_bound_discipline,
-    polish_pocs_float64,
-)
+from repro.core.edits import EncodedEdits, decode_edits
+from repro.core.engine import CorrectionEngine, default_engine
+from repro.core.ffcz import FFCz, FFCzBlob, FFCzConfig
 
 _RAW = b"R"
 _FFZ = b"F"
@@ -64,6 +57,7 @@ class CheckpointCodec:
         min_size: int = 4096,
         max_iters: int = 50,
         block: int = 4096,
+        engine: Optional[CorrectionEngine] = None,
     ):
         self.enabled = enabled
         self.min_size = min_size
@@ -72,9 +66,11 @@ class CheckpointCodec:
         self.max_iters = max_iters
         self.block = block
         self.base = get_compressor(base)
+        self.engine = engine or default_engine()
         self.ffcz = FFCz(
             self.base,
             FFCzConfig(E_rel=E_rel, Delta_rel=Delta_rel, max_iters=max_iters, codec="zlib", verify=False),
+            engine=self.engine,
         )
 
     def _eligible(self, arr: np.ndarray) -> bool:
@@ -125,47 +121,33 @@ class CheckpointCodec:
         if not idx:
             return out
 
-        m = DEFAULT_QUANT_BITS
         block = self.block
-        errs = []  # base-compression error tensors, consumed by correct_batch
-        work = []  # (i, base_blob, tiles0, E, Delta, E_proj, Delta_proj)
+        errs = []  # base-compression error tensors, consumed by engine.correct
+        work = []  # (leaf index, base_blob, float64 tiling, PencilPlan)
         for i in idx:
             x32 = arrays[i].astype(np.float32)
-            E = self.E_rel * float(np.ptp(x32))
-            flat = x32.reshape(-1)
-            pad = (-flat.size) % block
-            tiles = np.pad(flat, (0, pad)).reshape(-1, block)
-            Delta = self.Delta_rel * float(np.abs(np.fft.rfft(tiles, axis=-1)).max())
-            # shared FFCz bound discipline, with per-pencil norms (the cast
-            # noise lands on each pencil's local spectrum)
-            E_proj, Delta_proj, Delta, _slack_f = float32_bound_discipline(
-                E,
-                Delta,
-                m,
-                np.sqrt((tiles.astype(np.float64) ** 2).sum(axis=-1).max()),
-                np.max(np.abs(x32)),
+            plan = self.engine.plan_pencils(
+                x32, E_rel=self.E_rel, Delta_rel=self.Delta_rel, block=block
             )
-            Delta = float(Delta)
-            if E_proj <= 0:
+            if plan is None:
                 # range below float32 representability — store raw instead
                 out[i] = self._raw(arrays[i])
                 continue
-            base_blob = self.base.compress(x32, E_proj)
+            base_blob = self.base.compress(x32, plan.E_proj)
             x_hat = np.asarray(self.base.decompress(base_blob), dtype=np.float32)
             eps0 = x_hat - x32
             # float64 tiling captured up front: the polish rebuilds the loop
             # state from it, so eps0 itself need not outlive the batched call
-            flat0 = eps0.astype(np.float64).reshape(-1)
-            tiles0 = np.pad(flat0, (0, (-flat0.size) % block)).reshape(-1, block)
+            tiles0 = self.engine.tile_f64(eps0, block)
             errs.append(eps0)
-            work.append((i, base_blob, tiles0, E, Delta, E_proj, Delta_proj))
+            work.append((i, base_blob, tiles0, plan))
 
         if not work:
             return out
-        _corr, edits, _stats = correct_batch(
+        _corr, edits, _stats = self.engine.correct(
             errs,
-            [w[5] for w in work],
-            [w[6] for w in work],
+            [w[3].E_proj for w in work],
+            [w[3].Delta_proj for w in work],
             block=block,
             max_iters=self.max_iters,
             return_edits=True,
@@ -173,30 +155,15 @@ class CheckpointCodec:
         )
         del errs  # free the float32 error copies; tiles0 carries the state
 
-        pair_w = np.asarray(rfft_pair_weights((block,))).reshape(-1)
-        for (i, base_blob, tiles0, E, Delta, E_proj, Delta_proj), (spat_t, freq_t) in zip(work, edits):
-            spat = np.asarray(spat_t, dtype=np.float64)
-            freq = np.asarray(freq_t, dtype=np.complex128)
-            eps_now = tiles0 + np.fft.irfft(freq, n=block, axis=-1) + spat
-            _eps, spat, freq = polish_pocs_float64(
-                eps_now, spat, freq, E_proj, Delta_proj, axes=(1,)
-            )
-            # adaptive bit-widths per array: FFCz.compress's closed-form
-            # cross-leakage choice, applied per worst-case pencil
-            k_s_max = int(np.count_nonzero(spat, axis=1).max()) if spat.size else 0
-            wsum_max = float(((freq != 0) * pair_w).sum(axis=1).max()) if freq.size else 0.0
-            m_s, m_f = adaptive_quant_bits(
-                m, k_s_max, E, Delta, wsum_max * Delta, block, cap=40
-            )
-            se = encode_edits(spat, E, m=m_s, codec="zlib")
-            fe = encode_edits(freq, Delta, m=m_f, codec="zlib", half_spectrum=True)
+        for (i, base_blob, tiles0, plan), (spat_t, freq_t) in zip(work, edits):
+            se, fe = self.engine.encode_pencils(spat_t, freq_t, tiles0, plan, codec="zlib")
             se_b, fe_b = se.to_bytes(), fe.to_bytes()
             arr = arrays[i]
             header = struct.pack(
                 "<BddIB",
                 _DTYPE_CODES[str(arr.dtype)],
-                E,
-                Delta,
+                plan.E,
+                plan.Delta,
                 block,
                 arr.ndim,
             )

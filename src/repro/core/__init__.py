@@ -2,6 +2,7 @@
 
 from repro.core.bounds import DualBounds, power_spectrum_delta
 from repro.core.cubes import project_fcube, project_scube
+from repro.core.engine import CorrectionEngine, default_engine
 from repro.core.ffcz import FFCz, FFCzConfig
 from repro.core.pocs import AlternatingProjectionResult, alternating_projection
 from repro.core.spectrum import power_spectrum, psnr, relative_frequency_error, ssnr
@@ -13,6 +14,8 @@ __all__ = [
     "project_scube",
     "alternating_projection",
     "AlternatingProjectionResult",
+    "CorrectionEngine",
+    "default_engine",
     "FFCz",
     "FFCzConfig",
     "power_spectrum",

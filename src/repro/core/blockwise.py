@@ -1,38 +1,53 @@
-"""Block-parallel FFCz for mesh-scale fields (DESIGN.md §2).
+"""Blockwise EXECUTE stage of the CorrectionEngine (DESIGN.md §2).
 
 The paper corrects one field per GPU.  At pod scale, fields (or framework
 tensors: weights, gradients, KV blocks) are tiled into pencils/blocks and each
 block is corrected independently — the frequency bound then applies to each
-block's local spectrum.  Correction is a single jitted, vmapped (and, under
-``shard_map``, fully distributed) alternating projection; there is no
-host round-trip per block.
+block's local spectrum.  This module is the pencil-tiling *execute* stage of
+:class:`repro.core.engine.CorrectionEngine`: the plan stage
+(:meth:`CorrectionEngine.plan_pencils`) resolves bounds and tiling, this
+module runs the device program, and :mod:`repro.core.edits` serializes the
+result.  Three execution backends share the same packed ``(B, block)``
+layout:
 
-Two entry points:
+``local``    — one :func:`blockwise_correct` dispatch per tensor (the
+               pre-batching behaviour; kept for comparison and tiny batches).
+``batched``  — MANY heterogeneous tensors in ONE device program
+               (:func:`correct_batch`): each tensor is flattened, padded and
+               tiled into shared ``(B, block)`` buffers (inputs donated when
+               corrected outputs are produced, so each output aliases its
+               input), per-tensor bounds become per-block bound vectors, and
+               a single vmapped POCS while_loop corrects everything.
+               Per-instance convergence is masked inside the loop (a
+               converged block's state is frozen while stragglers iterate),
+               and per-tensor iteration counts / convergence flags are
+               reported.
+``sharded``  — the batched program's vmapped POCS runs inside a
+               ``shard_map`` region over a device mesh axis: the packed
+               block buffer is sharded along its leading (blocks) axis, each
+               device corrects only its resident pencils, and nothing is
+               gathered to one host.  Blocks are independent, so no
+               collectives run inside the region; results are bitwise
+               identical to the batched backend.
 
-``blockwise_correct``     — one tensor, one (scalar-bound) correction.
-``correct_batch``         — MANY heterogeneous tensors in ONE device program:
-    each tensor is flattened, padded and tiled into shared ``(B, block)``
-    buffers (inputs donated when corrected outputs are produced, so each
-    output aliases its input), per-tensor bounds become per-block bound
-    vectors, and a single vmapped POCS while_loop corrects everything.  Per-instance convergence is
-    masked inside the loop (a converged block's state is frozen while
-    stragglers iterate), and per-tensor iteration counts / convergence flags
-    are reported.  This is what the framework integrations
-    (optim/grad_compress, serving/kv_compress, checkpoint/codec) call so
-    multi-tensor workloads stop paying per-tensor dispatch.
+Framework integrations (optim/grad_compress, serving/kv_compress,
+checkpoint/codec) reach these backends through the engine, so multi-tensor
+workloads stop paying per-tensor dispatch and pick up distribution for free.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.pocs import alternating_projection
+from repro.sharding.shardmap import shard_map
 
 
 def tile_1d(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, int]:
@@ -103,9 +118,48 @@ class BatchCorrectionStats:
     block_converged: Any  # (total_blocks,) bool
 
 
-def _correct_batch_core(tensors, E_arr, Delta_arr, block, max_iters, return_edits, return_corrected):
-    """The whole batched correction — pack, vmapped POCS, unpack, per-instance
-    stats — as ONE device program (no per-tensor dispatch)."""
+def _pocs_batched(packed, E_blk, D_blk, max_iters):
+    """Vmapped POCS over a packed (B, block) buffer (the batched backend)."""
+    return jax.vmap(
+        lambda t, e, d: alternating_projection(t, e, d, max_iters=max_iters)
+    )(packed, E_blk, D_blk)
+
+
+def _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis):
+    """The batched POCS program under ``shard_map`` over ``mesh[axis]``.
+
+    The leading (blocks) axis is sharded; each device runs the vmapped
+    while_loop over its resident pencils only.  Blocks are independent, so
+    the region needs no collectives and the math is bitwise identical to
+    :func:`_pocs_batched`.  The block count is padded to a multiple of the
+    axis size with already-feasible zero blocks (E = Delta = 1), which
+    converge at the first check and are sliced off before stats.
+    """
+    n_dev = mesh.shape[axis]
+    nb = packed.shape[0]
+    pad = (-nb) % n_dev
+    if pad:
+        packed = jnp.concatenate([packed, jnp.zeros((pad, packed.shape[1]), packed.dtype)])
+        E_blk = jnp.concatenate([E_blk, jnp.ones((pad,), E_blk.dtype)])
+        D_blk = jnp.concatenate([D_blk, jnp.ones((pad,), D_blk.dtype)])
+    res = shard_map(
+        lambda t, e, d: _pocs_batched(t, e, d, max_iters),
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=P(axis),
+    )(packed, E_blk, D_blk)
+    if pad:
+        res = jax.tree.map(lambda a: a[:nb], res)
+    return res
+
+
+def _correct_batch_core(
+    tensors, E_arr, Delta_arr, block, max_iters, return_edits, return_corrected,
+    backend="batched", mesh=None, axis="data",
+):
+    """The whole batched correction — pack, vmapped POCS (optionally sharded
+    over a mesh axis), unpack, per-instance stats — as ONE device program
+    (no per-tensor dispatch)."""
     n = len(tensors)
     tiles_list, pads, counts = [], [], []
     for t in tensors:
@@ -118,9 +172,10 @@ def _correct_batch_core(tensors, E_arr, Delta_arr, block, max_iters, return_edit
     E_blk = E_arr.astype(jnp.float32)[seg]
     D_blk = Delta_arr.astype(jnp.float32)[seg]
 
-    res = jax.vmap(
-        lambda t, e, d: alternating_projection(t, e, d, max_iters=max_iters)
-    )(packed, E_blk, D_blk)
+    if backend == "sharded":
+        res = _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis)
+    else:
+        res = _pocs_batched(packed, E_blk, D_blk, max_iters)
 
     corrected, edits = [], []
     offset = 0
@@ -140,7 +195,9 @@ def _correct_batch_core(tensors, E_arr, Delta_arr, block, max_iters, return_edit
     return tuple(corrected), tuple(edits), stats
 
 
-_BATCH_STATICS = ("block", "max_iters", "return_edits", "return_corrected")
+_BATCH_STATICS = (
+    "block", "max_iters", "return_edits", "return_corrected", "backend", "mesh", "axis",
+)
 # donating makes each corrected output alias its input buffer; without
 # corrected outputs there is nothing to alias, so donation would only warn
 _correct_batch_donated = functools.partial(
@@ -169,6 +226,9 @@ def correct_batch(
     max_iters: int = 50,
     return_edits: bool = False,
     return_corrected: bool = True,
+    backend: str = "batched",
+    mesh: Optional[Any] = None,
+    axis: str = "data",
 ):
     """Correct a heterogeneous batch of error tensors in one device program.
 
@@ -188,6 +248,13 @@ def correct_batch(
       return_corrected: set False (with ``return_edits``) to skip
         materializing the per-tensor corrected outputs when only the edit
         streams are consumed — ``corrected`` is then an empty list.
+      backend: ``"batched"`` (default) runs the vmapped POCS on one device;
+        ``"sharded"`` runs it under ``shard_map`` with the packed block
+        buffer sharded over ``mesh[axis]`` — a multi-device batch is
+        corrected without gathering the pencils to one device, with bitwise
+        identical results.
+      mesh, axis: device mesh and axis name for the sharded backend
+        (required when ``backend == "sharded"``).
 
     Returns ``(corrected, stats)`` — or ``(corrected, edits, stats)`` with
     ``return_edits`` — where ``corrected[i]`` has ``tensors[i]``'s shape and
@@ -198,6 +265,8 @@ def correct_batch(
     single jitted program; callable from inside a larger jitted program too.
     """
     n = len(tensors)
+    if backend == "sharded" and mesh is None:
+        raise ValueError("backend='sharded' requires a mesh")
     if n == 0:
         stats = BatchCorrectionStats(
             iterations=jnp.zeros((0,), jnp.int32),
@@ -216,6 +285,9 @@ def correct_batch(
         max_iters=max_iters,
         return_edits=return_edits,
         return_corrected=return_corrected,
+        backend=backend,
+        mesh=mesh,
+        axis=axis,
     )
     if return_edits:
         return list(corrected), list(edits), stats

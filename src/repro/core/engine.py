@@ -1,0 +1,517 @@
+"""Device-resident CorrectionEngine: the one FFCz pipeline every workload shares.
+
+The paper's Alg. 1 is a single correction loop, but each integration
+(whole-field codec, checkpoint batch codec, KV-cache compression, gradient
+compression) needs the same scaffolding around it: bound resolution,
+float32/quantization bound discipline, the jitted POCS program, pair-weighted
+bit-width selection, and edit-stream serialization.  This module factors that
+scaffolding into three explicit stages behind one engine object:
+
+  PLAN     resolve user bounds to absolute dual bounds, apply the shared
+           :func:`float32_bound_discipline`, pick whole-field vs pencil
+           tiling, and fix quantization widths' base ``m``.  Spectra are
+           computed on device and ONLY when a bound actually consumes them
+           (``Delta_abs`` needs no forward FFT at all).
+  EXECUTE  one jitted device program: FFT + POCS via
+           :func:`repro.core.pocs.alternating_projection` (whole field) or
+           the packed vmapped program of
+           :func:`repro.core.blockwise.correct_batch` (pencils), plus the
+           exact float64 polish.  Three pluggable backends:
+             ``local``    single-device, one dispatch per tensor;
+             ``batched``  donated, vmapped, one program per batch (default);
+             ``sharded``  the batched program under ``jax.shard_map`` over a
+                          mesh axis — a multi-device batch is corrected where
+                          it lives, never gathered to one host.
+  ENCODE   pair-weight accounting, :func:`adaptive_quant_bits`, and
+           edit-stream serialization through :mod:`repro.core.edits`.
+
+Clients hold no private copies of this math: :class:`repro.core.ffcz.FFCz`
+is a thin plan/execute/encode client (plus base-compressor I/O and byte
+assembly), and ``checkpoint/codec``, ``serving/kv_compress``,
+``optim/grad_compress`` route their corrections through
+:meth:`CorrectionEngine.correct`.  A new scenario is a new engine client,
+not a fifth pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.coding.quantize import DEFAULT_QUANT_BITS
+from repro.core import blockwise
+from repro.core.bounds import power_spectrum_delta_rfft, resolve_bounds
+from repro.core.cubes import rfft_pair_weights
+from repro.core.edits import EncodedEdits, encode_edits
+from repro.core.pocs import alternating_projection
+
+_BACKENDS = ("local", "batched", "sharded")
+
+
+# ---------------------------------------------------------------------------
+# shared guarantee math (one home; FFCz re-exports for backward compat)
+
+
+def polish_pocs_float64(eps, spat, freq, E, Delta, axes=None, max_iters: int = 30):
+    """Exact (float64) POCS iterations to absorb float32 FFT round-off.
+
+    Runs on the rfft half-spectrum over ``axes`` (default: all axes —
+    whole-field polish; the pencil path passes the pencil axis), with
+    ``freq`` the matching half-spectrum accumulator.  Residual violations
+    after the float32 loop are O(eps32 * ||delta||_inf), orders of magnitude
+    below the bounds, so this converges in a handful of iterations and
+    contributes negligibly to the edit payload.
+    """
+    axes = tuple(range(eps.ndim)) if axes is None else tuple(axes)
+    s = [eps.shape[a] for a in axes]
+    for _ in range(max_iters):
+        delta = np.fft.rfftn(eps, axes=axes)
+        re = np.clip(delta.real, -Delta, Delta)
+        im = np.clip(delta.imag, -Delta, Delta)
+        clipped = re + 1j * im
+        if np.array_equal(clipped, delta):
+            break
+        freq = freq + (clipped - delta)
+        eps_f = np.fft.irfftn(clipped, s=s, axes=axes)
+        eps_s = np.clip(eps_f, -E, E)
+        spat = spat + (eps_s - eps_f)
+        eps = eps_s
+    return eps, spat, freq
+
+
+def float32_bound_discipline(E, Delta, m: int, l2_norm: float, abs_max: float):
+    """Shrink user bounds for quantization + float32-storage round-off.
+
+    Reserves 2x the direct quantization term (one for the stream's own
+    noise, one for the other stream's cross-domain leakage — matched by
+    :func:`adaptive_quant_bits`), subtracts the absolute float32 slack
+    (casting the reconstruction perturbs each frequency component by
+    ~u32*l2_norm, 4-sigma statistical budget, and each point by
+    u32*abs_max), and clamps Delta at 4x the frequency slack so the bound
+    stays representable.  ``Delta`` may be a scalar or a pointwise grid.
+    Shared by every engine plan (whole-field and pencil), so the guarantee
+    math lives in one place.
+
+    Returns ``(E_proj, Delta_proj, Delta_floored, slack_f)``.
+    """
+    u32 = float(np.finfo(np.float32).eps)
+    shrink = 1.0 - 2.0 ** (-m) - 2.0 ** (-m)
+    slack_f = 4.0 * u32 * float(l2_norm)
+    slack_s = u32 * float(abs_max)
+    Delta = np.maximum(Delta, 4.0 * slack_f)
+    return E * shrink - slack_s, Delta * shrink - slack_f, Delta, slack_f
+
+
+def adaptive_quant_bits(m: int, k_s: int, E: float, min_delta: float, sum_w_delta: float, n: int, cap: int = 48):
+    """Closed-form edit-stream bit-widths covering cross-domain quant leakage.
+
+    The base width ``m`` covers each stream's *direct* quantization term;
+    the widened widths also fit the cross terms inside the same reserved
+    margin: ``k_s`` quantized spatial edits perturb every frequency
+    component by up to ``k_s * E * 2^-m_s`` after the FFT (kept under
+    ``min_delta * 2^-m``), and the active frequency edits — ``sum_w_delta``
+    being their conjugate-pair-weighted Delta sum — perturb every spatial
+    point by up to ``(sqrt2/n) * sum_w_delta * 2^-m_f`` after the IFFT
+    (kept under ``E * 2^-m``).  Shared by the engine's whole-field and
+    pencil encode stages, so the guarantee math lives in one place.
+    """
+    m_s = m
+    if k_s > 0 and min_delta > 0 and E > 0:
+        m_s = m + max(0, int(np.ceil(np.log2(max(k_s * E / min_delta, 1.0)))))
+    m_f = m
+    if sum_w_delta > 0 and E > 0 and n > 0:
+        ratio = np.sqrt(2.0) * sum_w_delta / (n * E)
+        m_f = m + max(0, int(np.ceil(np.log2(max(ratio, 1.0)))))
+    return min(m_s, cap), min(m_f, cap)
+
+
+# ---------------------------------------------------------------------------
+# plan objects
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldPlan:
+    """PLAN-stage output for one whole-field correction.
+
+    ``Delta`` is the representability-floored bound the edits are encoded
+    against (scalar, or a float32 half-spectrum ``Delta_k`` grid in
+    ``pspec`` mode); ``E_proj``/``Delta_proj`` are the shrunk bounds the
+    projection actually runs with (see :func:`float32_bound_discipline`).
+    """
+
+    shape: Tuple[int, ...]
+    E: float
+    Delta: Union[float, np.ndarray]
+    E_proj: float
+    Delta_proj: Union[float, np.ndarray]
+    slack_f: float
+    pointwise: bool
+    quant_bits: int
+    max_iters: int
+    relax: float
+    use_kernels: bool
+    codec: str
+
+    @property
+    def delta_scalar(self) -> float:
+        """Scalar Delta for the blob header (nan when pointwise)."""
+        return float("nan") if self.pointwise else float(self.Delta)
+
+    def pointwise_bytes(self) -> Optional[bytes]:
+        """float32 half-spectrum Delta_k grid for the blob, or None."""
+        if not self.pointwise:
+            return None
+        return np.asarray(self.Delta, dtype=np.float32).tobytes()
+
+
+@dataclasses.dataclass(frozen=True)
+class PencilPlan:
+    """PLAN-stage output for one tensor's pencil-tiled correction.
+
+    The frequency bound applies to each ``block``-length pencil's local
+    rfft spectrum: ``Delta = Delta_rel * max_k |RFFT(pencil of x)_k|``.
+    """
+
+    block: int
+    quant_bits: int
+    E: float
+    Delta: float
+    E_proj: float
+    Delta_proj: float
+
+
+@dataclasses.dataclass
+class FieldResult:
+    """EXECUTE-stage output: float64-exact loop state ready to encode."""
+
+    eps: np.ndarray  # final error vector (float64, inside both cubes)
+    spat: np.ndarray  # spatial edit accumulator (float64)
+    freq: np.ndarray  # frequency edit accumulator (complex128, rfft layout)
+    iterations: int
+    converged: bool
+
+
+# ---------------------------------------------------------------------------
+# the engine
+
+
+class CorrectionEngine:
+    """Plan / execute / encode FFCz corrections on a pluggable backend.
+
+    Args:
+      backend: ``"local"`` (one dispatch per tensor), ``"batched"`` (one
+        donated vmapped program per batch; the default), or ``"sharded"``
+        (the batched program under ``shard_map`` over ``mesh[axis]``).
+      mesh: device mesh for the sharded backend.  Defaults to a 1-D mesh
+        over all local devices, built lazily on first use so engine
+        construction never touches jax device state.
+      axis: mesh axis name the packed block buffer is sharded over.
+    """
+
+    def __init__(self, backend: str = "batched", mesh: Optional[Any] = None, axis: str = "data"):
+        if backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+        self.backend = backend
+        self.axis = axis
+        self._mesh = mesh
+
+    # Engines compare by configuration, not identity, so jitted functions
+    # taking an engine as a static argument (e.g. compress_kv_tensor) hit
+    # one cache entry for equivalent engines instead of retracing per
+    # instance.  A lazily-built default mesh changes the key once on first
+    # sharded use (one extra retrace), never corrupts a cache.
+    def _key(self):
+        return (self.backend, self.axis, self._mesh)
+
+    def __eq__(self, other):
+        return isinstance(other, CorrectionEngine) and self._key() == other._key()
+
+    def __hash__(self):
+        return hash(self._key())
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            self._mesh = jax.make_mesh((len(jax.devices()),), (self.axis,))
+        return self._mesh
+
+    # -- PLAN --------------------------------------------------------------
+
+    def plan_field(self, x: np.ndarray, cfg) -> FieldPlan:
+        """Resolve one whole field's bounds on device (cfg: FFCzConfig).
+
+        The forward spectrum is computed (as a device rfft) only when a
+        bound consumes it: ``pspec_rel`` needs the pointwise grid,
+        ``Delta_rel`` needs ``max_k |X_k|``, and ``Delta_abs`` needs no
+        forward FFT at all.
+
+        Precision note: the device rfft runs in float32, so relative bounds
+        resolved from it (``Delta_rel`` / ``pspec_rel``) can differ from a
+        host-float64 resolution — and across device backends — at float32
+        rounding level (~1e-7 relative).  The blob stores the resolved
+        values it was built with and all guarantees are verified against
+        those stored values, so the bound contract is unaffected; byte
+        identity of blobs only holds within one backend.  (The pencil path
+        keeps host-float64 resolution — see :meth:`plan_pencils` — because
+        its per-pencil Delta is a convention external tools recompute.)
+        """
+        x32 = np.asarray(x, dtype=np.float32)
+        x_dev = jnp.asarray(x32)
+        if cfg.pspec_rel is not None:
+            X = jnp.fft.rfftn(x_dev)
+            grid = power_spectrum_delta_rfft(X, cfg.pspec_rel)
+            gmax = float(jnp.max(grid))
+            floor = gmax * cfg.pspec_floor_rel if gmax > 0 else 1.0
+            Delta_user = np.asarray(jnp.maximum(grid, floor), dtype=np.float32)
+            bounds = resolve_bounds(x_dev, E_abs=cfg.E_abs, E_rel=cfg.E_rel, Delta_abs=1.0)
+            pointwise = True
+        elif cfg.Delta_abs is not None:
+            bounds = resolve_bounds(x_dev, E_abs=cfg.E_abs, E_rel=cfg.E_rel, Delta_abs=cfg.Delta_abs)
+            Delta_user = float(bounds.Delta)
+            pointwise = False
+        else:
+            X = jnp.fft.rfftn(x_dev)
+            bounds = resolve_bounds(x_dev, E_abs=cfg.E_abs, E_rel=cfg.E_rel, Delta_rel=cfg.Delta_rel, X=X)
+            Delta_user = float(bounds.Delta)
+            pointwise = False
+        E = float(bounds.E)
+        l2_norm = float(jnp.linalg.norm(x_dev.ravel())) if x32.size else 0.0
+        abs_max = float(jnp.max(jnp.abs(x_dev))) if x32.size else 0.0
+        E_proj, Delta_proj, Delta, slack_f = float32_bound_discipline(
+            E, Delta_user, cfg.quant_bits, l2_norm, abs_max
+        )
+        if not pointwise:
+            Delta_proj = float(Delta_proj)
+            Delta = float(Delta)
+        if E_proj <= 0:
+            raise ValueError(f"spatial bound E={E:g} below float32 representability for this data")
+        return FieldPlan(
+            shape=tuple(x32.shape),
+            E=E,
+            Delta=Delta,
+            E_proj=float(E_proj),
+            Delta_proj=Delta_proj,
+            slack_f=float(slack_f),
+            pointwise=pointwise,
+            quant_bits=cfg.quant_bits,
+            max_iters=cfg.max_iters,
+            relax=cfg.relax,
+            use_kernels=cfg.use_kernels,
+            codec=cfg.codec,
+        )
+
+    def plan_pencils(
+        self,
+        x32: np.ndarray,
+        *,
+        E_rel: float,
+        Delta_rel: float,
+        block: int,
+        quant_bits: int = DEFAULT_QUANT_BITS,
+    ) -> Optional[PencilPlan]:
+        """Resolve one tensor's pencil-tiled bounds; None if E underflows.
+
+        Bound resolution here stays in host float64 (``np.fft.rfft``): the
+        per-pencil ``Delta`` is the published guarantee other tools
+        recompute exactly, so it must not pick up float32-FFT jitter.  The
+        cast-noise slack uses per-pencil norms (the noise lands on each
+        pencil's local spectrum).
+        """
+        E = E_rel * float(np.ptp(x32))
+        flat = x32.reshape(-1)
+        tiles = np.pad(flat, (0, (-flat.size) % block)).reshape(-1, block)
+        Delta = Delta_rel * float(np.abs(np.fft.rfft(tiles, axis=-1)).max())
+        E_proj, Delta_proj, Delta, _slack_f = float32_bound_discipline(
+            E,
+            Delta,
+            quant_bits,
+            np.sqrt((tiles.astype(np.float64) ** 2).sum(axis=-1).max()),
+            np.max(np.abs(x32)) if x32.size else 0.0,
+        )
+        if E_proj <= 0:
+            return None
+        return PencilPlan(
+            block=block,
+            quant_bits=quant_bits,
+            E=E,
+            Delta=float(Delta),
+            E_proj=float(E_proj),
+            Delta_proj=float(Delta_proj),
+        )
+
+    @staticmethod
+    def tile_f64(eps0: np.ndarray, block: int) -> np.ndarray:
+        """Float64 (n_blocks, block) tiling of an error tensor — the exact
+        loop state the pencil polish rebuilds from, captured up front so the
+        float32 original need not outlive the batched device call."""
+        flat = np.asarray(eps0, dtype=np.float64).reshape(-1)
+        return np.pad(flat, (0, (-flat.size) % block)).reshape(-1, block)
+
+    # -- EXECUTE -----------------------------------------------------------
+
+    def execute_field(self, eps0: np.ndarray, plan: FieldPlan) -> FieldResult:
+        """One jitted device POCS program + the exact float64 polish.
+
+        The jitted loop runs in float32 (the TPU perf path, as the paper
+        runs FP32 on A100); its convergence check is therefore only
+        float32-exact.  A few exact host-side POCS iterations absorb the
+        FFT round-off so the *shrunk* bounds hold in float64, leaving the
+        full quantization margin intact.
+        """
+        res = alternating_projection(
+            jnp.asarray(eps0, dtype=jnp.float32),
+            plan.E_proj,
+            jnp.asarray(plan.Delta_proj),
+            max_iters=plan.max_iters,
+            use_kernels=plan.use_kernels,
+            relax=plan.relax,
+            check_slack=0.5 * plan.slack_f,
+        )
+        spat = np.asarray(res.spat_edits, dtype=np.float64)
+        freq = np.asarray(res.freq_edits, dtype=np.complex128)
+        eps_f = np.asarray(res.eps, dtype=np.float64)
+        eps_f, spat, freq = polish_pocs_float64(
+            eps_f, spat, freq, plan.E_proj, np.asarray(plan.Delta_proj, dtype=np.float64)
+        )
+        return FieldResult(
+            eps=eps_f,
+            spat=spat,
+            freq=freq,
+            iterations=int(res.iterations),
+            converged=bool(res.converged),
+        )
+
+    def correct(
+        self,
+        tensors: Sequence[Any],
+        E,
+        Delta,
+        block: int = 4096,
+        max_iters: int = 50,
+        return_edits: bool = False,
+        return_corrected: bool = True,
+    ):
+        """Pencil-tiled correction of a heterogeneous batch on this backend.
+
+        Same contract as :func:`repro.core.blockwise.correct_batch` (which
+        implements the ``batched`` and ``sharded`` backends); the ``local``
+        backend dispatches one program per tensor.  Jit-safe on the batched
+        backend, so jitted integrations can call through unchanged.
+        """
+        if self.backend == "local":
+            return self._correct_local(tensors, E, Delta, block, max_iters, return_edits, return_corrected)
+        return blockwise.correct_batch(
+            tensors,
+            E,
+            Delta,
+            block=block,
+            max_iters=max_iters,
+            return_edits=return_edits,
+            return_corrected=return_corrected,
+            backend=self.backend,
+            mesh=self.mesh if self.backend == "sharded" else None,
+            axis=self.axis,
+        )
+
+    def _correct_local(self, tensors, E, Delta, block, max_iters, return_edits, return_corrected):
+        """Per-tensor dispatch (the pre-batching behaviour, kept for
+        comparison benches and single-tensor calls).  Bounds go through the
+        same resolver as the batched/sharded backends so the scalar-vs-
+        per-tensor contract cannot diverge."""
+        n = len(tensors)
+        Es = blockwise._as_bound_array(E, n)
+        Ds = blockwise._as_bound_array(Delta, n)
+        corrected, edits, it_blocks, conv_blocks, it_t, conv_t = [], [], [], [], [], []
+        for t, e, d in zip(tensors, Es, Ds):
+            t = jnp.asarray(t)
+            corr, spat, freq, iters, conv = blockwise.blockwise_correct_with_edits(
+                t, e, d, block=block, max_iters=max_iters
+            )
+            if return_corrected:
+                corrected.append(corr.astype(t.dtype))
+            if return_edits:
+                edits.append((spat, freq))
+            it_blocks.append(iters)
+            conv_blocks.append(conv)
+            it_t.append(jnp.max(iters))
+            conv_t.append(jnp.all(conv))
+        stats = blockwise.BatchCorrectionStats(
+            iterations=jnp.stack(it_t) if n else jnp.zeros((0,), jnp.int32),
+            converged=jnp.stack(conv_t) if n else jnp.zeros((0,), bool),
+            block_iterations=jnp.concatenate(it_blocks) if n else jnp.zeros((0,), jnp.int32),
+            block_converged=jnp.concatenate(conv_blocks) if n else jnp.zeros((0,), bool),
+        )
+        if return_edits:
+            return corrected, edits, stats
+        return corrected, stats
+
+    # -- ENCODE ------------------------------------------------------------
+
+    def encode_field(self, result: FieldResult, plan: FieldPlan) -> Tuple[EncodedEdits, EncodedEdits]:
+        """Serialize a whole field's edit streams with adaptive bit-widths.
+
+        K_s and the active pair-weighted Delta sum are known exactly
+        post-projection, so the widths come from the closed form in
+        :func:`adaptive_quant_bits` (beyond-paper; the paper fixes m = 16
+        which covers only the direct term).  The Delta sum runs over the
+        *full* spectrum, so each active half-spectrum edit contributes with
+        its conjugate-pair multiplicity.
+        """
+        k_s = int(np.count_nonzero(result.spat))
+        pair_w = np.broadcast_to(np.asarray(rfft_pair_weights(plan.shape)), result.freq.shape)
+        delta_b = np.broadcast_to(np.asarray(plan.Delta), result.freq.shape)
+        sum_active_delta = float(np.sum((pair_w * delta_b)[result.freq != 0]))
+        m_s, m_f = adaptive_quant_bits(
+            plan.quant_bits,
+            k_s,
+            plan.E,
+            float(np.min(plan.Delta)),
+            sum_active_delta,
+            int(np.prod(plan.shape)) if plan.shape else 1,
+        )
+        se = encode_edits(result.spat, plan.E, m=m_s, codec=plan.codec)
+        fe = encode_edits(result.freq, plan.Delta, m=m_f, codec=plan.codec, half_spectrum=True)
+        return se, fe
+
+    def encode_pencils(
+        self,
+        spat_t: Any,
+        freq_t: Any,
+        tiles0: np.ndarray,
+        plan: PencilPlan,
+        codec: str = "zlib",
+    ) -> Tuple[EncodedEdits, EncodedEdits]:
+        """Polish + serialize one tensor's pencil edit streams.
+
+        ``spat_t``/``freq_t`` are the device edit tiles from
+        :meth:`correct`; ``tiles0`` the float64 tiling of the *initial*
+        error (:meth:`tile_f64`).  The float64 polish reruns on the
+        reconstructed loop state, then adaptive bit-widths are chosen per
+        worst-case pencil.
+        """
+        spat = np.asarray(spat_t, dtype=np.float64)
+        freq = np.asarray(freq_t, dtype=np.complex128)
+        eps_now = tiles0 + np.fft.irfft(freq, n=plan.block, axis=-1) + spat
+        _eps, spat, freq = polish_pocs_float64(
+            eps_now, spat, freq, plan.E_proj, plan.Delta_proj, axes=(1,)
+        )
+        pair_w = np.asarray(rfft_pair_weights((plan.block,))).reshape(-1)
+        k_s_max = int(np.count_nonzero(spat, axis=1).max()) if spat.size else 0
+        wsum_max = float(((freq != 0) * pair_w).sum(axis=1).max()) if freq.size else 0.0
+        m_s, m_f = adaptive_quant_bits(
+            plan.quant_bits, k_s_max, plan.E, plan.Delta, wsum_max * plan.Delta, plan.block, cap=40
+        )
+        se = encode_edits(spat, plan.E, m=m_s, codec=codec)
+        fe = encode_edits(freq, plan.Delta, m=m_f, codec=codec, half_spectrum=True)
+        return se, fe
+
+
+@functools.lru_cache(maxsize=None)
+def default_engine() -> CorrectionEngine:
+    """Process-wide batched engine the framework integrations share."""
+    return CorrectionEngine(backend="batched")

@@ -1,32 +1,37 @@
-"""FFCz public codec: base compressor + alternating projection + coded edits.
+"""FFCz public codec: a thin plan/execute/encode client of the CorrectionEngine.
 
-This is the end-to-end pipeline of the paper (Fig. 4 / Alg. 1):
+This is the end-to-end pipeline of the paper (Fig. 4 / Alg. 1), expressed as
+the three engine stages of :class:`repro.core.engine.CorrectionEngine`:
 
   compress(x):
-    1. base.compress(x, E')           -> base blob (spatially bounded)
-    2. eps = base.decompress(...) - x
-    3. alternating_projection(eps)    -> spat_edits, freq_edits
-    4. encode_edits(...)              -> flags + quantized + Huffman/zlib
+    1. PLAN     engine.plan_field(x, cfg)   -> bounds resolved on device,
+                float32/quantization discipline applied, pointwise Delta_k
+                grids built from a device rfft (and only when a bound
+                actually consumes the spectrum — Delta_abs skips the
+                forward FFT entirely)
+    2.          base.compress(x, E_proj)    -> base blob (spatially bounded)
+    3. EXECUTE  engine.execute_field(x_hat - x, plan)
+                -> one jitted device POCS program (Hermitian rfft
+                half-spectrum loop) + exact float64 polish
+    4. ENCODE   engine.encode_field(result, plan)
+                -> pair-weighted adaptive bit-widths, flags + quantized +
+                Huffman/zlib edit streams
+    5.          byte assembly (FFCzBlob)
 
   decompress(blob):
     x_hat_base + spat_edits + IRFFT(freq_edits)
     (the "complete spatial edits" of §IV-B)
 
-rFFT fast path: the error vector is real, so the whole frequency side runs
-on the Hermitian half-spectrum — the POCS loop (``use_rfft``), the pointwise
-``pspec_rel`` Delta grids, the float64 polish, the adaptive quant-bit
-cross-leakage accounting (conjugate-pair weighted), and the serialized
-``freq_edits`` stream (roughly half the components to flag/quantize/store).
-The blob marks half-spectrum streams via ``EncodedEdits.half_spectrum``
-(bit 7 of the packed header byte); blobs written by the old full-spectrum
-pipeline have the bit clear and decode through the legacy ``ifftn`` branch.
+The class owns only what is irreducibly codec-shaped: base-compressor I/O,
+post-hoc verification, and the wire format.  All bound discipline,
+projection, pair-weight and bit-width math lives in the engine, shared with
+the pencil-tiled checkpoint/KV/gradient paths.
 
-Bound discipline: the projection runs against bounds shrunk by
-``(1 - 2^-m - slack)`` so that quantization error (direct term, <= bound*2^-m)
-plus the cross-domain leakage of the *other* stream's quantization noise
-(second order, absorbed by ``slack``) keeps the final reconstruction inside
-the user's cubes.  ``compress`` verifies both bounds post-hoc and reports the
-margins in :class:`FFCzStats`.
+Wire format: blobs carry a ``FFCZ`` magic + version byte (version 1) and
+length-validated section table; version-0 (magic-less) blobs from older
+writers are sniffed and still decode, including legacy full-spectrum
+frequency streams (``EncodedEdits.half_spectrum`` clear) via the ``ifftn``
+branch of :meth:`FFCz.decompress`.
 """
 
 from __future__ import annotations
@@ -35,14 +40,28 @@ import dataclasses
 import struct
 from typing import Any, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.coding.quantize import DEFAULT_QUANT_BITS
-from repro.core.bounds import power_spectrum_delta_rfft, resolve_bounds
-from repro.core.cubes import rfft_pair_weights, rfft_shape
-from repro.core.edits import EncodedEdits, decode_edits, encode_edits
-from repro.core.pocs import alternating_projection
+from repro.core.cubes import rfft_shape
+from repro.core.edits import EncodedEdits, decode_edits
+from repro.core.engine import (  # re-exported for backward compatibility
+    CorrectionEngine,
+    adaptive_quant_bits,
+    default_engine,
+    float32_bound_discipline,
+    polish_pocs_float64,
+)
+
+__all__ = [
+    "FFCz",
+    "FFCzBlob",
+    "FFCzConfig",
+    "FFCzStats",
+    "adaptive_quant_bits",
+    "float32_bound_discipline",
+    "polish_pocs_float64",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,9 +117,26 @@ class FFCzStats:
         return self.base_bytes + self.edit_bytes
 
 
+_MAGIC = b"FFCZ"
+_WIRE_VERSION = 1
+_V0_HEADER = "<ddBQQQQ"  # E, Delta_scalar, ndim, len(base), len(se), len(fe), len(pw)
+
+
 @dataclasses.dataclass(frozen=True)
 class FFCzBlob:
-    """Serialized FFCz compression result."""
+    """Serialized FFCz compression result.
+
+    Version-1 wire layout (what :meth:`to_bytes` writes)::
+
+        b"FFCZ" | u8 version | <ddBQQQQ> E, Delta, ndim, nb, ns, nf, npw
+        | ndim * u64 shape | base | spat_edits | freq_edits | pointwise
+
+    :meth:`from_bytes` length-validates every section against the payload
+    and raises ``ValueError`` on truncated or foreign bytes.  Blobs written
+    before the magic was introduced (version 0) start directly with the
+    ``<ddBQQQQ>`` header; they are sniffed by the absent magic and decode
+    unchanged.
+    """
 
     base_blob: bytes
     spat_edits: EncodedEdits
@@ -120,8 +156,9 @@ class FFCzBlob:
         se = self.spat_edits.to_bytes()
         fe = self.freq_edits.to_bytes()
         pw = self.pointwise_delta or b""
-        header = struct.pack(
-            "<ddBQQQQ",
+        header = _MAGIC + struct.pack("<B", _WIRE_VERSION)
+        header += struct.pack(
+            _V0_HEADER,
             self.E,
             self.Delta_scalar,
             len(self.shape),
@@ -135,10 +172,34 @@ class FFCzBlob:
 
     @staticmethod
     def from_bytes(data: bytes) -> "FFCzBlob":
-        E, Delta, ndim, nb, ns, nf, npw = struct.unpack_from("<ddBQQQQ", data, 0)
-        off = struct.calcsize("<ddBQQQQ")
+        if data[:4] == _MAGIC:
+            if len(data) < 5:
+                raise ValueError("truncated FFCz blob: magic without version byte")
+            version = data[4]
+            if version != _WIRE_VERSION:
+                raise ValueError(f"unsupported FFCz blob version {version}")
+            return FFCzBlob._parse(data, offset=5)
+        # version-0 sniff: magic-less blobs start directly with the header
+        return FFCzBlob._parse(data, offset=0)
+
+    @staticmethod
+    def _parse(data: bytes, offset: int) -> "FFCzBlob":
+        head = struct.calcsize(_V0_HEADER)
+        if len(data) < offset + head:
+            raise ValueError(f"truncated FFCz blob: {len(data)} bytes < {offset + head}-byte header")
+        E, Delta, ndim, nb, ns, nf, npw = struct.unpack_from(_V0_HEADER, data, offset)
+        off = offset + head
+        if ndim > 16:
+            raise ValueError(f"not an FFCz blob: implausible rank {ndim}")
+        if len(data) < off + 8 * ndim:
+            raise ValueError("truncated FFCz blob: shape table cut off")
         shape = struct.unpack_from(f"<{ndim}Q", data, off)
         off += 8 * ndim
+        expected = off + nb + ns + nf + npw
+        if len(data) != expected:
+            raise ValueError(
+                f"corrupt FFCz blob: {len(data)} bytes, section table wants {expected}"
+            )
         base = data[off : off + nb]
         off += nb
         se = EncodedEdits.from_bytes(data[off : off + ns])
@@ -165,206 +226,59 @@ def _irfftn(a: np.ndarray, shape) -> np.ndarray:
     return np.fft.irfftn(a, s=shape, axes=tuple(range(len(shape))))
 
 
-def polish_pocs_float64(eps, spat, freq, E, Delta, axes=None, max_iters: int = 30):
-    """Exact (float64) POCS iterations to absorb float32 FFT round-off.
-
-    Runs on the rfft half-spectrum over ``axes`` (default: all axes —
-    whole-field polish; the blockwise checkpoint codec passes the pencil
-    axis), with ``freq`` the matching half-spectrum accumulator.  Residual
-    violations after the float32 loop are O(eps32 * ||delta||_inf), orders
-    of magnitude below the bounds, so this converges in a handful of
-    iterations and contributes negligibly to the edit payload.
-    """
-    axes = tuple(range(eps.ndim)) if axes is None else tuple(axes)
-    s = [eps.shape[a] for a in axes]
-    for _ in range(max_iters):
-        delta = np.fft.rfftn(eps, axes=axes)
-        re = np.clip(delta.real, -Delta, Delta)
-        im = np.clip(delta.imag, -Delta, Delta)
-        clipped = re + 1j * im
-        if np.array_equal(clipped, delta):
-            break
-        freq = freq + (clipped - delta)
-        eps_f = np.fft.irfftn(clipped, s=s, axes=axes)
-        eps_s = np.clip(eps_f, -E, E)
-        spat = spat + (eps_s - eps_f)
-        eps = eps_s
-    return eps, spat, freq
-
-
-def float32_bound_discipline(E, Delta, m: int, l2_norm: float, abs_max: float):
-    """Shrink user bounds for quantization + float32-storage round-off.
-
-    Reserves 2x the direct quantization term (one for the stream's own
-    noise, one for the other stream's cross-domain leakage — matched by
-    :func:`adaptive_quant_bits`), subtracts the absolute float32 slack
-    (casting the reconstruction perturbs each frequency component by
-    ~u32*l2_norm, 4-sigma statistical budget, and each point by
-    u32*abs_max), and clamps Delta at 4x the frequency slack so the bound
-    stays representable.  ``Delta`` may be a scalar or a pointwise grid.
-    Shared by the whole-field pipeline (``FFCz.compress``) and the
-    blockwise checkpoint codec (per-pencil norms), so the guarantee math
-    lives in one place.
-
-    Returns ``(E_proj, Delta_proj, Delta_floored, slack_f)``.
-    """
-    u32 = float(np.finfo(np.float32).eps)
-    shrink = 1.0 - 2.0 ** (-m) - 2.0 ** (-m)
-    slack_f = 4.0 * u32 * float(l2_norm)
-    slack_s = u32 * float(abs_max)
-    Delta = np.maximum(Delta, 4.0 * slack_f)
-    return E * shrink - slack_s, Delta * shrink - slack_f, Delta, slack_f
-
-
-def adaptive_quant_bits(m: int, k_s: int, E: float, min_delta: float, sum_w_delta: float, n: int, cap: int = 48):
-    """Closed-form edit-stream bit-widths covering cross-domain quant leakage.
-
-    The base width ``m`` covers each stream's *direct* quantization term;
-    the widened widths also fit the cross terms inside the same reserved
-    margin: ``k_s`` quantized spatial edits perturb every frequency
-    component by up to ``k_s * E * 2^-m_s`` after the FFT (kept under
-    ``min_delta * 2^-m``), and the active frequency edits — ``sum_w_delta``
-    being their conjugate-pair-weighted Delta sum — perturb every spatial
-    point by up to ``(sqrt2/n) * sum_w_delta * 2^-m_f`` after the IFFT
-    (kept under ``E * 2^-m``).  Shared by the whole-field pipeline
-    (``FFCz.compress``) and the blockwise checkpoint codec (per worst-case
-    pencil), so the guarantee math lives in one place.
-    """
-    m_s = m
-    if k_s > 0 and min_delta > 0 and E > 0:
-        m_s = m + max(0, int(np.ceil(np.log2(max(k_s * E / min_delta, 1.0)))))
-    m_f = m
-    if sum_w_delta > 0 and E > 0 and n > 0:
-        ratio = np.sqrt(2.0) * sum_w_delta / (n * E)
-        m_f = m + max(0, int(np.ceil(np.log2(max(ratio, 1.0)))))
-    return min(m_s, cap), min(m_f, cap)
-
-
 class FFCz:
     """Spectrum-preserving codec wrapping an arbitrary base compressor.
 
     ``base`` must expose ``compress(x, E) -> bytes`` and
     ``decompress(blob) -> np.ndarray`` with a pointwise L-inf guarantee.
+    ``engine`` defaults to the shared process-wide engine.  Note the
+    whole-field EXECUTE stage always runs as one single-device jitted
+    program regardless of the engine's backend (the backend selects how
+    *pencil batches* execute via ``engine.correct``); a distributed
+    whole-field FFT is a ROADMAP item.
     """
 
-    def __init__(self, base: Any, config: FFCzConfig = FFCzConfig()):
+    def __init__(self, base: Any, config: FFCzConfig = FFCzConfig(), engine: Optional[CorrectionEngine] = None):
         self.base = base
         self.config = config
+        self.engine = engine or default_engine()
 
     # -- compression ------------------------------------------------------
 
     def compress(self, x: np.ndarray) -> FFCzBlob:
         cfg = self.config
-        x = np.asarray(x, dtype=np.float32)
-        # Hermitian fast path: all frequency-side work (bounds, POCS, polish,
-        # edit stream) happens on the rfft half-spectrum
-        X = np.fft.rfftn(x)
+        x32 = np.asarray(x, dtype=np.float32)
 
-        # Resolve user bounds, then apply the shared float32 bound discipline
-        # (quantization shrink + storage slack + representability Delta
-        # floor — see :func:`float32_bound_discipline`; the 4-sigma
-        # statistical slack was chosen over the deterministic u*||x||_1
-        # bound, which is ~50x more conservative and was measured to
-        # dominate weak shells' power-spectrum ribbon).
-        if cfg.pspec_rel is not None:
-            Delta_user = np.asarray(power_spectrum_delta_rfft(jnp.asarray(X), cfg.pspec_rel), dtype=np.float32)
-            floor = float(Delta_user.max()) * cfg.pspec_floor_rel if Delta_user.max() > 0 else 1.0
-            Delta_user = np.maximum(Delta_user, floor)
-            bounds = resolve_bounds(jnp.asarray(x), E_abs=cfg.E_abs, E_rel=cfg.E_rel, Delta_abs=1.0)
-        else:
-            bounds = resolve_bounds(
-                jnp.asarray(x),
-                E_abs=cfg.E_abs,
-                E_rel=cfg.E_rel,
-                Delta_abs=cfg.Delta_abs,
-                Delta_rel=cfg.Delta_rel,
-                X=jnp.asarray(X),
-            )
-            Delta_user = float(bounds.Delta)
-        E = float(bounds.E)
-        E_proj, Delta_proj, Delta, slack_f = float32_bound_discipline(
-            E,
-            Delta_user,
-            cfg.quant_bits,
-            np.linalg.norm(x.ravel()),
-            np.max(np.abs(x)) if x.size else 0.0,
-        )
-        if cfg.pspec_rel is not None:
-            delta_scalar = float("nan")
-            pointwise = Delta.astype(np.float32).tobytes()
-        else:
-            Delta = float(Delta)
-            delta_scalar = Delta
-            pointwise = None
-        if E_proj <= 0:
-            raise ValueError(f"spatial bound E={E:g} below float32 representability for this data")
-
-        base_blob = self.base.compress(x, E_proj)
+        plan = self.engine.plan_field(x32, cfg)
+        base_blob = self.base.compress(x32, plan.E_proj)
         x_hat = np.asarray(self.base.decompress(base_blob), dtype=np.float32)
-        eps0 = x_hat - x
 
-        res = alternating_projection(
-            jnp.asarray(eps0),
-            E_proj,
-            jnp.asarray(Delta_proj),
-            max_iters=cfg.max_iters,
-            use_kernels=cfg.use_kernels,
-            relax=cfg.relax,
-            check_slack=0.5 * slack_f,
-        )
-        spat = np.asarray(res.spat_edits, dtype=np.float64)
-        freq = np.asarray(res.freq_edits, dtype=np.complex128)
-
-        # Float64 polish: the jitted POCS runs in float32 (the TPU perf
-        # path, as the paper runs FP32 on A100); its convergence check is
-        # therefore only float32-exact.  A few exact host-side POCS
-        # iterations absorb the FFT round-off so the *shrunk* bounds hold in
-        # float64, leaving the full quantization margin intact.
-        eps_f = np.asarray(res.eps, dtype=np.float64)
-        eps_f, spat, freq = polish_pocs_float64(
-            eps_f, spat, freq, E_proj, np.asarray(Delta_proj, dtype=np.float64)
-        )
-
-        # Adaptive quantization bit-widths (beyond-paper refinement; the paper
-        # fixes m = 16 which covers only the direct term): K_s and the active
-        # weighted Delta sum are known exactly post-projection, so the widths
-        # come from the closed form in :func:`adaptive_quant_bits`.  The
-        # Delta sum runs over the *full* spectrum, so each active
-        # half-spectrum edit contributes with its conjugate-pair multiplicity.
-        k_s = int(np.count_nonzero(spat))
-        pair_w = np.broadcast_to(np.asarray(rfft_pair_weights(x.shape)), freq.shape)
-        delta_b = np.broadcast_to(np.asarray(Delta), freq.shape)
-        sum_active_delta = float(np.sum((pair_w * delta_b)[freq != 0]))
-        m_s, m_f = adaptive_quant_bits(
-            cfg.quant_bits, k_s, E, float(np.min(Delta)), sum_active_delta, x.size
-        )
-
-        se = encode_edits(spat, E, m=m_s, codec=cfg.codec)
-        fe = encode_edits(freq, Delta, m=m_f, codec=cfg.codec, half_spectrum=True)
+        result = self.engine.execute_field(x_hat - x32, plan)
+        se, fe = self.engine.encode_field(result, plan)
 
         blob = FFCzBlob(
             base_blob=base_blob,
             spat_edits=se,
             freq_edits=fe,
-            E=E,
-            Delta_scalar=delta_scalar,
-            pointwise_delta=pointwise,
-            shape=x.shape,
+            E=plan.E,
+            Delta_scalar=plan.delta_scalar,
+            pointwise_delta=plan.pointwise_bytes(),
+            shape=plan.shape,
         )
 
         stats = None
         if cfg.verify:
             x_final = self.decompress(blob)
-            eps = x_final.astype(np.float64) - x.astype(np.float64)
+            eps = x_final.astype(np.float64) - x32.astype(np.float64)
             # half-spectrum check is exhaustive: every full-spectrum component
             # shares |Re|/|Im| (and its Delta_k) with its conjugate image here
             d = np.fft.rfftn(eps)
-            spatial_margin = float(E - np.max(np.abs(eps)))
-            freq_excess = np.maximum(np.abs(d.real), np.abs(d.imag)) - np.asarray(Delta)
+            spatial_margin = float(plan.E - np.max(np.abs(eps)))
+            freq_excess = np.maximum(np.abs(d.real), np.abs(d.imag)) - np.asarray(plan.Delta)
             frequency_margin = float(-np.max(freq_excess))
             stats = FFCzStats(
-                iterations=int(res.iterations),
-                converged=bool(res.converged),
+                iterations=result.iterations,
+                converged=result.converged,
                 n_active_spatial=se.n_active,
                 n_active_frequency=fe.n_active,
                 base_bytes=len(base_blob),
@@ -399,5 +313,3 @@ class FFCz:
     def roundtrip(self, x: np.ndarray):
         blob = self.compress(x)
         return self.decompress(blob), blob
-
-

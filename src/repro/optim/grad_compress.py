@@ -6,9 +6,11 @@ Two pieces:
 inside train_step: per-tensor int-quantization to ``bits`` with error bound
 E = E_rel * ||g||_inf, followed by FFCz blockwise dual-domain correction so
 the *spectrum* of the quantized gradient stays within Delta = Delta_rel *
-max|FFT| of each block.  Semantically this is what each worker sends into the
-compressed all-reduce; keeping it inside the pjit program means GSPMD still
-owns the actual reduction.
+max|FFT| of each block.  The correction executes through
+:meth:`repro.core.engine.CorrectionEngine.correct` (this module owns only
+the quantizer and bound derivation).  Semantically this is what each worker
+sends into the compressed all-reduce; keeping it inside the pjit program
+means GSPMD still owns the actual reduction.
 
 ``compressed_psum``     — the explicit collective pattern for deployments
 that want the wire-format win too: a shard_map region that quantizes to int32
@@ -20,14 +22,14 @@ workers beyond the single-quantizer bound.
 
 from __future__ import annotations
 
-import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.blockwise import correct_batch
+from repro.core.engine import CorrectionEngine, default_engine
+from repro.sharding.shardmap import shard_map
 
 
 def _quantize_dequantize(g: jnp.ndarray, bits: int, E_rel: float):
@@ -50,6 +52,7 @@ def compress_gradients(
     Delta_rel: float = 1e-2,
     block: int = 4096,
     max_iters: int = 8,
+    engine: Optional[CorrectionEngine] = None,
 ) -> Any:
     """Quantize + FFCz-correct every gradient tensor (dual-domain bounded).
 
@@ -59,11 +62,11 @@ def compress_gradients(
     of a length-N pencil live on a N*E scale).
 
     All tensors of the gradient pytree are corrected by batched
-    :func:`repro.core.blockwise.correct_batch` device calls — one per
-    distinct effective pencil length (tensors smaller than ``block`` keep
-    their tighter ``size``-length pencil) — instead of one dispatch per
-    tensor.
+    ``engine.correct`` device calls — one per distinct effective pencil
+    length (tensors smaller than ``block`` keep their tighter
+    ``size``-length pencil) — instead of one dispatch per tensor.
     """
+    engine = engine or default_engine()
     leaves, treedef = jax.tree.flatten(grads)
     work = []  # (leaf_idx, err, E, Delta, effective block)
     for i, g in enumerate(leaves):
@@ -79,7 +82,7 @@ def compress_gradients(
     out = list(leaves)
     for blk in sorted({w[4] for w in work}):
         group = [w for w in work if w[4] == blk]
-        corrected, _stats = correct_batch(
+        corrected, _stats = engine.correct(
             [w[1] for w in group],
             [w[2] for w in group],
             [w[3] for w in group],
@@ -99,9 +102,6 @@ def compressed_psum(x: jnp.ndarray, mesh, axis: str = "data", *, bits: int = 8, 
     ``axis``.  Codes are psum'd as int32; the result is the dequantized mean.
     """
 
-    @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False
-    )
     def _inner(v):
         v32 = v.astype(jnp.float32)
         gmax = jax.lax.pmax(jnp.max(jnp.abs(v32)), axis)
@@ -111,4 +111,4 @@ def compressed_psum(x: jnp.ndarray, mesh, axis: str = "data", *, bits: int = 8, 
         n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
         return (total.astype(jnp.float32) * step / n).astype(v.dtype)
 
-    return _inner(x)
+    return shard_map(_inner, mesh=mesh, in_specs=P(), out_specs=P())(x)

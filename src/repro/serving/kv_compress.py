@@ -10,9 +10,12 @@ edits); tests verify both bounds and end-to-end logit drift.
 
 Multi-tenant batching: ``compress_cache`` no longer dispatches one corrector
 per layer/leaf — every K/V sub-tensor in the cache pytree is quantized, then
-ALL quantization-error tensors go through a single
-:func:`repro.core.blockwise.correct_batch` device program (donated packed
-buffer, per-instance bounds and convergence masking).
+ALL quantization-error tensors go through ONE
+:meth:`repro.core.engine.CorrectionEngine.correct` device program (donated
+packed buffer, per-instance bounds and convergence masking; with a sharded
+engine the packed pencils are corrected under ``shard_map`` across the
+mesh).  This module owns only the KV-specific workload shaping (pencil
+orientation over the sequence dim, quantizer, bound derivation).
 
 Inapplicable to attention-free archs (mamba2: no KV cache; SSM state is tiny
 and kept exact) — noted in DESIGN.md §Arch-applicability.
@@ -21,12 +24,12 @@ and kept exact) — noted in DESIGN.md §Arch-applicability.
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.blockwise import correct_batch
+from repro.core.engine import CorrectionEngine, default_engine
 
 
 def _quantize_pencils(kv: jnp.ndarray, bits: int, E_rel: float, batched: bool = False):
@@ -48,7 +51,7 @@ def _quantize_pencils(kv: jnp.ndarray, bits: int, E_rel: float, batched: bool = 
     return xt, q - xt, E
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "block", "max_iters"))
+@functools.partial(jax.jit, static_argnames=("bits", "block", "max_iters", "engine"))
 def compress_kv_tensor(
     kv: jnp.ndarray,  # (b, hkv, S, hd)
     *,
@@ -57,24 +60,41 @@ def compress_kv_tensor(
     Delta_rel: float = 1e-2,
     block: int = 1024,
     max_iters: int = 8,
+    engine: Optional[CorrectionEngine] = None,
 ) -> jnp.ndarray:
-    """Quantize + FFCz-correct a KV tensor; returns the lossy round-trip."""
+    """Quantize + FFCz-correct a KV tensor; returns the lossy round-trip.
+
+    ``engine`` is a static jit argument routing the correction through its
+    backend/mesh; engines hash by configuration (backend, axis, mesh), so
+    equal-config instances share one compiled program.
+    """
     xt, err, E = _quantize_pencils(kv, bits, E_rel)
     Delta = Delta_rel * block * E
-    [corrected_err], _stats = correct_batch([err], E, Delta, block=block, max_iters=max_iters)
+    [corrected_err], _stats = (engine or default_engine()).correct(
+        [err], E, Delta, block=block, max_iters=max_iters
+    )
     out = jnp.swapaxes(xt + corrected_err, -2, -1)
     return out.astype(kv.dtype)
 
 
 def compress_cache(
-    cache: Any, comp, *, bits: int = 8, block: int = 1024, max_iters: int = 8
+    cache: Any,
+    comp,
+    *,
+    bits: int = 8,
+    block: int = 1024,
+    max_iters: int = 8,
+    engine: Optional[CorrectionEngine] = None,
 ) -> Any:
     """Apply KV compression to every k/v leaf of a cache pytree.
 
-    All layers'/leaves' quantization errors are corrected by ONE batched
-    device call (per-sub-tensor E/Delta, per-instance convergence), instead
-    of a jit dispatch per leaf.
+    All layers'/leaves' quantization errors are corrected by ONE
+    ``engine.correct`` device call (per-sub-tensor E/Delta, per-instance
+    convergence), instead of a jit dispatch per leaf; the engine's backend
+    decides whether that program is vmapped on one device or sharded over a
+    mesh.
     """
+    engine = engine or default_engine()
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
     kv_idx = []
     for i, (path, leaf) in enumerate(flat):
@@ -101,7 +121,7 @@ def compress_cache(
         Ds.extend(comp.kv_Delta_rel * block * E[j] for j in range(E.shape[0]))
         prepped.append((i, sub.shape[0], start, leaf.shape, leaf.dtype))
 
-    corrected, _stats = correct_batch(errs, Es, Ds, block=block, max_iters=max_iters)
+    corrected, _stats = engine.correct(errs, Es, Ds, block=block, max_iters=max_iters)
 
     leaves = [leaf for _, leaf in flat]
     for i, n_sub, start, shape, dtype in prepped:

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.sharding.shardmap import shard_map
+
 
 def pipeline_apply(
     stage_fn: Callable,
@@ -76,12 +78,11 @@ def pipeline_apply(
         return outbuf[None]  # leading stage axis for the P(axis) out_spec
 
     spec_params = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(
+    fn = shard_map(
         per_stage,
         mesh=mesh,
         in_specs=(spec_params, P()),
         out_specs=P(axis),  # (S, M, mb, ...): stage-major stack
-        check_vma=False,
     )
     stacked = fn(stage_params, microbatches)
     return stacked[-1]  # only the last stage's buffer holds real outputs

@@ -47,7 +47,11 @@ class TestParamRules:
         tree = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
         specs = param_pspecs(tree, MESH)
         assert specs["embed"] != P(None, None)
-        flat = jax.tree.leaves_with_path(specs, is_leaf=lambda x: isinstance(x, P))
+        # tree_flatten_with_path spans jax versions (jax.tree.leaves_with_path
+        # arrived later)
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P)
+        )
         mlp = [s for p, s in flat if "w_gu" in str(p)]
         assert all(s[-1] == "model" for s in mlp)
 
