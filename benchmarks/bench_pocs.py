@@ -214,6 +214,70 @@ def bench_engine_field(shape, max_iters: int, repeat: int):
 _BACKEND_CHILD = "--_backend-child"
 
 
+def bench_dist_field_child(n_devices: int, shape, max_iters: int, repeat: int):
+    """Whole-field POCS: fused single-device loop vs the pencil-sharded loop.
+
+    Runs inside the multi-device subprocess.  Both sides run exactly
+    ``max_iters`` forced iterations on the adversarial field (asserted), so
+    the ratio is a per-iteration cost ratio.  On fake CPU devices the shards
+    share physical cores, so this row measures the all_to_all transpose
+    overhead and gates parity; distribution wins land on a real mesh where
+    the slabs live on different HBMs.
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    # the engine's own compiled program, so the bench measures exactly what
+    # FFCz.compress ships (one shared builder, no hand-copied shard_map spec)
+    from repro.core.engine import _sharded_field_pocs_fn
+    from repro.sharding.dist_fft import freq_partition_spec, validate_pencil_shape
+
+    try:
+        validate_pencil_shape(shape, n_devices)
+    except ValueError as e:
+        print(f"dist_field case skipped for {n_devices} devices: {e}")
+        return []
+    eps0_np, E, Delta_np = _adversarial_field(shape)
+    Delta_half = Delta_np[..., : shape[-1] // 2 + 1]
+    eps0 = jnp.asarray(eps0_np)
+    Delta = jnp.asarray(Delta_np)
+
+    mesh = jax.make_mesh((n_devices,), ("data",))
+    fspec = freq_partition_spec(len(shape), "data")
+    eps_sh = jax.device_put(eps0_np, NamedSharding(mesh, P("data")))
+    delta_sh = jax.device_put(Delta_half, NamedSharding(mesh, fspec))
+    E32, slack32 = np.float32(E), np.float32(0.0)
+    pocs = _sharded_field_pocs_fn(mesh, "data", shape, True, max_iters, 1.0)
+
+    r_single = alternating_projection(eps0, E, Delta, max_iters=max_iters)
+    r_dist = pocs(eps_sh, delta_sh, E32, slack32)
+    assert int(r_single.iterations) == max_iters, "retune the bench"
+    assert int(r_dist.iterations) == max_iters, "dist loop diverged from fused loop"
+    assert np.array_equal(np.asarray(r_single.eps), np.asarray(r_dist.eps)), "parity"
+
+    t_single, t_dist = _bench_pair(
+        lambda: alternating_projection(eps0, E, Delta, max_iters=max_iters).eps,
+        lambda: pocs(eps_sh, delta_sh, E32, slack32).eps,
+        repeat,
+    )
+    mb = eps0.size * 4 / 1e6
+    ratio = t_single / t_dist
+    return [
+        {
+            "bench": "dist_field",
+            "path": path,
+            "n_devices": n_devices,
+            "shape": list(shape),
+            "iterations": max_iters,
+            "wall_s": t,
+            "iters_per_s": max_iters / t,
+            "mb_per_s": mb * max_iters / t,
+            "speedup_pencil_vs_fused": ratio,
+        }
+        for path, t in (("fused-single-device", t_single), ("pencil-sharded", t_dist))
+    ]
+
+
 def bench_backends_child(n_devices: int, n_tensors: int, size: int, block: int, max_iters: int, repeat: int):
     """Runs inside the multi-device subprocess: batched vs sharded backend."""
     from repro.core.engine import CorrectionEngine
@@ -290,6 +354,12 @@ def main():
             max_iters=8,
             repeat=3 if args.quick else 16,
         )
+        rows += bench_dist_field_child(
+            n_devices=args.backend_child,
+            shape=(64, 32, 16) if args.quick else (128, 128, 64),
+            max_iters=8 if args.quick else 20,
+            repeat=3 if args.quick else 16,
+        )
         print("ROWS:" + json.dumps(rows))
         return
 
@@ -328,6 +398,12 @@ def main():
             f"backends ({args.devices} fake devices): sharded vs batched = "
             f"{backend_rows[0]['speedup_sharded_vs_batched']:.2f}x"
         )
+        dist_rows = [r for r in backend_rows if r["bench"] == "dist_field"]
+        if dist_rows:
+            print(
+                f"dist_field ({args.devices} fake devices): pencil-sharded vs "
+                f"fused single-device = {dist_rows[0]['speedup_pencil_vs_fused']:.2f}x"
+            )
 
     meta = {
         "backend": jax.default_backend(),

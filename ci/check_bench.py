@@ -1,0 +1,90 @@
+"""Bench regression guard: the recorded BENCH_pocs.json must cover every
+case the benchmark emits.
+
+``benchmarks/bench_pocs.py`` is the anchor for the perf claims in ROADMAP;
+when someone adds a bench case without refreshing the recorded numbers, the
+JSON silently stops describing the benchmark.  This check smoke-runs the
+benchmark in ``--quick`` mode (small shapes, few repeats — a correctness run,
+not a measurement) into a scratch file and fails if any emitted
+``(bench, path)`` case kind is missing from the checked-in BENCH_pocs.json.
+Shapes/sizes are not compared: quick mode deliberately shrinks them.
+
+Usage:  PYTHONPATH=src python ci/check_bench.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+RECORDED = os.path.join(ROOT, "BENCH_pocs.json")
+
+
+def case_kinds(rows) -> set:
+    return {(r.get("bench", "?"), r.get("path", "?")) for r in rows}
+
+
+def main() -> int:
+    with open(RECORDED) as f:
+        recorded = case_kinds(json.load(f)["rows"])
+
+    bench = os.path.join(ROOT, "benchmarks", "bench_pocs.py")
+    with tempfile.TemporaryDirectory() as tmp:
+        out = os.path.join(tmp, "bench.json")
+        proc = subprocess.run(
+            [sys.executable, bench, "--quick", "--out", out],
+            cwd=ROOT,
+            capture_output=True,
+            text=True,
+            timeout=1800,
+        )
+        print(proc.stdout[-3000:])
+        if proc.returncode != 0:
+            print(f"bench_pocs.py --quick failed (exit {proc.returncode}):")
+            print(proc.stderr[-3000:])
+            return 1
+        with open(out) as f:
+            emitted = case_kinds(json.load(f)["rows"])
+
+    if not emitted:
+        print("benchmark emitted no rows — smoke run did not measure anything")
+        return 1
+    rc = 0
+    missing = sorted(emitted - recorded)
+    if missing:
+        print(
+            f"\nSTALE BENCH RECORD: {len(missing)} case(s) emitted by the benchmark"
+            " but absent from BENCH_pocs.json — refresh it (run bench_pocs.py"
+            " without --quick):"
+        )
+        for kind in missing:
+            print(f"  bench={kind[0]} path={kind[1]}")
+        rc = 1
+    # the other direction catches silently-lost coverage: bench_pocs degrades
+    # gracefully when e.g. the multi-device subprocess dies (it just drops
+    # those rows), which must not read as a passing smoke run
+    dropped = sorted(recorded - emitted)
+    if dropped:
+        print(
+            f"\nLOST BENCH COVERAGE: {len(dropped)} recorded case(s) the smoke run"
+            " no longer emits — the benchmark degraded (dead case, failed"
+            " subprocess leg?):"
+        )
+        for kind in dropped:
+            print(f"  bench={kind[0]} path={kind[1]}")
+        rc = 1
+    if rc == 0:
+        print(
+            f"\nbench record OK: {len(emitted)} emitted case kind(s), all recorded"
+            f" ({len(recorded)} in BENCH_pocs.json)"
+        )
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

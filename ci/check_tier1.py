@@ -1,5 +1,5 @@
 """Tier-1 gate for CI: run the ROADMAP test command and fail on NEW failures
-(regressions) relative to ci/known_failures.txt — AND on stale entries
+(regressions) relative to a known-failures list — AND on stale entries
 (known failures that now pass), so the list can only shrink.
 
 Known failures are environment-dependent seed-era issues tracked for
@@ -7,26 +7,47 @@ burn-down; anything not on the list fails the build, and a list entry that
 passes fails the build too, forcing the entry to be pruned in the same
 change that fixed it (otherwise the list silently stops gating the test).
 
-Usage:  PYTHONPATH=src python ci/check_tier1.py
+Each CI leg passes its own list (``--known``), so the single-device and
+multi-device matrix legs gate independently; the leg's environment (e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) is inherited by the
+pytest subprocess as-is.
+
+Usage:  PYTHONPATH=src python ci/check_tier1.py [--known FILE] [--junit FILE]
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import re
 import subprocess
 import sys
 
 HERE = os.path.dirname(os.path.abspath(__file__))
-KNOWN = os.path.join(HERE, "known_failures.txt")
 
 
 def main() -> int:
-    with open(KNOWN) as f:
-        known = {line.strip() for line in f if line.strip() and not line.startswith("#")}
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--known",
+        default=os.path.join(HERE, "known_failures.txt"),
+        help="per-leg known-failures list (default: ci/known_failures.txt)",
+    )
+    ap.add_argument(
+        "--junit",
+        default=None,
+        help="also write a junit xml report here (uploaded as a CI artifact)",
+    )
+    args = ap.parse_args()
 
+    with open(args.known) as f:
+        known = {ln.strip() for ln in f if ln.strip() and not ln.startswith("#")}
+
+    cmd = [sys.executable, "-m", "pytest", "-q", "--tb=no", "-rEf"]
+    if args.junit:
+        cmd.append(f"--junitxml={args.junit}")
     proc = subprocess.run(
-        [sys.executable, "-m", "pytest", "-q", "--tb=no", "-rEf"],
+        cmd,
         cwd=os.path.dirname(HERE),
         capture_output=True,
         text=True,
@@ -55,7 +76,8 @@ def main() -> int:
     fixed = sorted(known - failed)
     rc = 0
     if fixed:
-        print(f"\nSTALE: {len(fixed)} known failure(s) now pass — prune ci/known_failures.txt:")
+        print(f"\nSTALE: {len(fixed)} known failure(s) now pass — prune:")
+        print(f"  (in {args.known})")
         for t in fixed:
             print(f"  {t}")
         rc = 1
@@ -65,7 +87,7 @@ def main() -> int:
             print(f"  {t}")
         rc = 1
     if rc == 0:
-        print(f"\ntier-1 OK: {len(failed)} failures, all known ({len(known)} on the list)")
+        print(f"\ntier-1 OK: {len(failed)} failures, all known ({len(known)} listed)")
     return rc
 
 

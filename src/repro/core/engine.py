@@ -42,13 +42,22 @@ from typing import Any, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.coding.quantize import DEFAULT_QUANT_BITS
 from repro.core import blockwise
 from repro.core.bounds import power_spectrum_delta_rfft, resolve_bounds
 from repro.core.cubes import rfft_pair_weights
 from repro.core.edits import EncodedEdits, encode_edits
-from repro.core.pocs import alternating_projection
+from repro.core.pocs import (
+    AlternatingProjectionResult,
+    _alternating_projection,
+    alternating_projection,
+)
+from repro.sharding import dist_fft
+from repro.sharding.dist_fft import ShardedField
+from repro.sharding.shardmap import shard_map
 
 _BACKENDS = ("local", "batched", "sharded")
 
@@ -82,6 +91,21 @@ def polish_pocs_float64(eps, spat, freq, E, Delta, axes=None, max_iters: int = 3
         spat = spat + (eps_s - eps_f)
         eps = eps_s
     return eps, spat, freq
+
+
+def _host_l2_norm(x32: np.ndarray) -> float:
+    """Sharding-invariant l2 norm feeding the cast-noise slack.
+
+    Computed as a float64 numpy pairwise sum on the host staging copy, so
+    the single-device and sharded plans resolve bitwise-identical bounds (an
+    on-device XLA reduction would re-order — and so re-round — with the
+    sharding; every other plan reduction is a max/min, which is exact in any
+    order).
+    """
+    if not x32.size:
+        return 0.0
+    x64 = np.asarray(x32, dtype=np.float64)
+    return float(np.sqrt(np.sum(x64 * x64)))
 
 
 def float32_bound_discipline(E, Delta, m: int, l2_norm: float, abs_max: float):
@@ -200,6 +224,41 @@ class FieldResult:
 # the engine
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_field_pocs_fn(mesh, ax: str, gshape, pointwise: bool, max_iters: int, relax: float):
+    """Compiled sharded whole-field POCS program, cached per (mesh, layout).
+
+    Scalar bounds enter as replicated operands so re-planning the same field
+    shape (or a new field of the same shape) reuses the compiled while_loop
+    instead of retracing — the whole-field analogue of ``_pencil_fft_fn``.
+    """
+    fspec = dist_fft.freq_partition_spec(len(gshape), ax)
+    d_spec = fspec if pointwise else P()
+
+    def run(e_loc, d_loc, E, slack):
+        return _alternating_projection(
+            e_loc,
+            E,
+            d_loc,
+            max_iters=max_iters,
+            relax=relax,
+            check_slack=slack,
+            dist=(ax, gshape),
+        )
+
+    out_specs = AlternatingProjectionResult(
+        eps=P(ax),
+        spat_edits=P(ax),
+        freq_edits=fspec,
+        iterations=P(),
+        converged=P(),
+        final_violations=P(),
+    )
+    return jax.jit(
+        shard_map(run, mesh=mesh, in_specs=(P(ax), d_spec, P(), P()), out_specs=out_specs)
+    )
+
+
 class CorrectionEngine:
     """Plan / execute / encode FFCz corrections on a pluggable backend.
 
@@ -242,13 +301,20 @@ class CorrectionEngine:
 
     # -- PLAN --------------------------------------------------------------
 
-    def plan_field(self, x: np.ndarray, cfg) -> FieldPlan:
+    def plan_field(self, x: Union[np.ndarray, ShardedField], cfg) -> FieldPlan:
         """Resolve one whole field's bounds on device (cfg: FFCzConfig).
 
         The forward spectrum is computed (as a device rfft) only when a
         bound consumes it: ``pspec_rel`` needs the pointwise grid,
         ``Delta_rel`` needs ``max_k |X_k|``, and ``Delta_abs`` needs no
         forward FFT at all.
+
+        A :class:`repro.sharding.dist_fft.ShardedField` keeps the spectrum
+        sharded: the forward transform is the pencil-decomposed distributed
+        rfftn and the bound grid is built on the sharded half-spectrum.  All
+        plan reductions are sharding-invariant (max/min, or the host-staged
+        :func:`_host_l2_norm`), so the resulting :class:`FieldPlan` is
+        bitwise identical to planning the gathered field on one device.
 
         Precision note: the device rfft runs in float32, so relative bounds
         resolved from it (``Delta_rel`` / ``pspec_rel``) can differ from a
@@ -260,10 +326,15 @@ class CorrectionEngine:
         keeps host-float64 resolution — see :meth:`plan_pencils` — because
         its per-pencil Delta is a convention external tools recompute.)
         """
-        x32 = np.asarray(x, dtype=np.float32)
-        x_dev = jnp.asarray(x32)
+        if isinstance(x, ShardedField):
+            x32, x_dev = x.to_host(), x.array
+            rfftn = lambda _dev: dist_fft.pencil_rfftn(x)  # noqa: E731
+        else:
+            x32 = np.asarray(x, dtype=np.float32)
+            x_dev = jnp.asarray(x32)
+            rfftn = jnp.fft.rfftn
         if cfg.pspec_rel is not None:
-            X = jnp.fft.rfftn(x_dev)
+            X = rfftn(x_dev)
             grid = power_spectrum_delta_rfft(X, cfg.pspec_rel)
             gmax = float(jnp.max(grid))
             floor = gmax * cfg.pspec_floor_rel if gmax > 0 else 1.0
@@ -275,12 +346,12 @@ class CorrectionEngine:
             Delta_user = float(bounds.Delta)
             pointwise = False
         else:
-            X = jnp.fft.rfftn(x_dev)
+            X = rfftn(x_dev)
             bounds = resolve_bounds(x_dev, E_abs=cfg.E_abs, E_rel=cfg.E_rel, Delta_rel=cfg.Delta_rel, X=X)
             Delta_user = float(bounds.Delta)
             pointwise = False
         E = float(bounds.E)
-        l2_norm = float(jnp.linalg.norm(x_dev.ravel())) if x32.size else 0.0
+        l2_norm = _host_l2_norm(x32)
         abs_max = float(jnp.max(jnp.abs(x_dev))) if x32.size else 0.0
         E_proj, Delta_proj, Delta, slack_f = float32_bound_discipline(
             E, Delta_user, cfg.quant_bits, l2_norm, abs_max
@@ -354,7 +425,7 @@ class CorrectionEngine:
 
     # -- EXECUTE -----------------------------------------------------------
 
-    def execute_field(self, eps0: np.ndarray, plan: FieldPlan) -> FieldResult:
+    def execute_field(self, eps0: Union[np.ndarray, ShardedField], plan: FieldPlan) -> FieldResult:
         """One jitted device POCS program + the exact float64 polish.
 
         The jitted loop runs in float32 (the TPU perf path, as the paper
@@ -362,16 +433,29 @@ class CorrectionEngine:
         float32-exact.  A few exact host-side POCS iterations absorb the
         FFT round-off so the *shrunk* bounds hold in float64, leaving the
         full quantization margin intact.
+
+        A :class:`ShardedField` ``eps0`` runs the same while_loop on local
+        slabs inside ``shard_map``, with the pencil-decomposed distributed
+        transforms in the loop body — the field-sized float32 state never
+        gathers to one device.  The loop trajectory is bitwise identical to
+        the single-device program (see :mod:`repro.sharding.dist_fft`), so
+        the edit streams — and the blobs built from them — match exactly.
         """
-        res = alternating_projection(
-            jnp.asarray(eps0, dtype=jnp.float32),
-            plan.E_proj,
-            jnp.asarray(plan.Delta_proj),
-            max_iters=plan.max_iters,
-            use_kernels=plan.use_kernels,
-            relax=plan.relax,
-            check_slack=0.5 * plan.slack_f,
-        )
+        if isinstance(eps0, ShardedField):
+            res = self._pocs_field_sharded(eps0, plan)
+        else:
+            res = alternating_projection(
+                jnp.asarray(eps0, dtype=jnp.float32),
+                plan.E_proj,
+                jnp.asarray(plan.Delta_proj),
+                max_iters=plan.max_iters,
+                use_kernels=plan.use_kernels,
+                relax=plan.relax,
+                check_slack=0.5 * plan.slack_f,
+            )
+        # edit state -> host: this is the encode/serialization staging (the
+        # single-device path stages identically); the float64 polish is a
+        # handful of host FFT round trips on the O(residual) edit state
         spat = np.asarray(res.spat_edits, dtype=np.float64)
         freq = np.asarray(res.freq_edits, dtype=np.complex128)
         eps_f = np.asarray(res.eps, dtype=np.float64)
@@ -385,6 +469,29 @@ class CorrectionEngine:
             iterations=int(res.iterations),
             converged=bool(res.converged),
         )
+
+    def _pocs_field_sharded(self, eps0: ShardedField, plan: FieldPlan):
+        """The whole-field POCS while_loop under ``shard_map`` (dist mode)."""
+        if plan.use_kernels:
+            raise ValueError("use_kernels is not supported for sharded whole fields")
+        mesh, ax, gshape = eps0.mesh, eps0.axis_name, eps0.shape
+        if plan.pointwise:
+            # pre-round the float64 plan grid to float32 on host (the same
+            # IEEE rounding jnp.asarray applies on the single-device path),
+            # then scatter straight into the frequency layout
+            delta_op = jax.device_put(
+                np.asarray(plan.Delta_proj, dtype=np.float32),
+                NamedSharding(mesh, eps0.freq_spec),
+            )
+        else:
+            delta_op = jnp.float32(plan.Delta_proj)
+        fn = _sharded_field_pocs_fn(
+            mesh, ax, gshape, plan.pointwise, plan.max_iters, plan.relax
+        )
+        # scalar bounds ride as replicated operands (pre-rounded to the f32
+        # values the single-device trace uses), so same-shape fields with
+        # different bounds share one compiled program
+        return fn(eps0.array, delta_op, np.float32(plan.E_proj), np.float32(0.5 * plan.slack_f))
 
     def correct(
         self,

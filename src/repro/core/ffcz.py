@@ -52,12 +52,14 @@ from repro.core.engine import (  # re-exported for backward compatibility
     float32_bound_discipline,
     polish_pocs_float64,
 )
+from repro.sharding.dist_fft import ShardedField
 
 __all__ = [
     "FFCz",
     "FFCzBlob",
     "FFCzConfig",
     "FFCzStats",
+    "ShardedField",
     "adaptive_quant_bits",
     "float32_bound_discipline",
     "polish_pocs_float64",
@@ -231,11 +233,17 @@ class FFCz:
 
     ``base`` must expose ``compress(x, E) -> bytes`` and
     ``decompress(blob) -> np.ndarray`` with a pointwise L-inf guarantee.
-    ``engine`` defaults to the shared process-wide engine.  Note the
-    whole-field EXECUTE stage always runs as one single-device jitted
-    program regardless of the engine's backend (the backend selects how
-    *pencil batches* execute via ``engine.correct``); a distributed
-    whole-field FFT is a ROADMAP item.
+    ``engine`` defaults to the shared process-wide engine.
+
+    Sharded whole fields: passing a
+    :class:`repro.sharding.dist_fft.ShardedField` to :meth:`compress` runs
+    the PLAN spectra and the EXECUTE POCS loop distributed (pencil-
+    decomposed rfftn under ``shard_map`` — device HBM never holds the
+    gathered field), producing a blob bitwise identical to compressing the
+    gathered field on one device.  The base compressor and the edit encoder
+    are host codecs by contract, so they stage through the field's host
+    copy exactly as the single-device pipeline does.  The engine *backend*
+    still only selects how pencil batches execute via ``engine.correct``.
     """
 
     def __init__(self, base: Any, config: FFCzConfig = FFCzConfig(), engine: Optional[CorrectionEngine] = None):
@@ -245,15 +253,19 @@ class FFCz:
 
     # -- compression ------------------------------------------------------
 
-    def compress(self, x: np.ndarray) -> FFCzBlob:
+    def compress(self, x) -> FFCzBlob:
         cfg = self.config
-        x32 = np.asarray(x, dtype=np.float32)
+        sharded = isinstance(x, ShardedField)
+        x32 = x.to_host() if sharded else np.asarray(x, dtype=np.float32)
 
-        plan = self.engine.plan_field(x32, cfg)
+        plan = self.engine.plan_field(x if sharded else x32, cfg)
         base_blob = self.base.compress(x32, plan.E_proj)
         x_hat = np.asarray(self.base.decompress(base_blob), dtype=np.float32)
 
-        result = self.engine.execute_field(x_hat - x32, plan)
+        eps0 = x_hat - x32
+        if sharded:
+            eps0 = ShardedField(eps0, x.mesh, x.axis_name, x.strict_bitwise)
+        result = self.engine.execute_field(eps0, plan)
         se, fe = self.engine.encode_field(result, plan)
 
         blob = FFCzBlob(
@@ -310,6 +322,30 @@ class FFCz:
         complete = spat + freq_spatial  # complete spatial edits (§IV-B)
         return (x_hat.astype(np.float64) + complete).astype(np.float32)
 
-    def roundtrip(self, x: np.ndarray):
+    def decompress_sharded(
+        self,
+        blob: FFCzBlob,
+        mesh=None,
+        axis_name: str = "data",
+        strict_bitwise: bool = False,
+    ) -> ShardedField:
+        """Decode a blob to a field resident on the mesh (slab-sharded, axis 0).
+
+        Decoding itself is host-bound: the blob sections are host bytes, and
+        the complete-spatial-edits inverse must run in float64 for the stored
+        dual-bound guarantees to verify exactly (the device path is float32).
+        The reconstructed field is scattered straight to its slabs, so the
+        result is bitwise identical to :meth:`decompress` while landing
+        device-resident for distributed consumers.
+
+        ``strict_bitwise`` defaults to False here — the scatter runs no
+        distributed FFT, so the power-of-two bitwise precondition is
+        irrelevant to decoding (and blobs written via the
+        ``strict_bitwise=False`` compress opt-out must stay decodable).
+        """
+        x = self.decompress(blob)
+        return ShardedField.shard(x, mesh, axis_name=axis_name, strict_bitwise=strict_bitwise)
+
+    def roundtrip(self, x):
         blob = self.compress(x)
         return self.decompress(blob), blob

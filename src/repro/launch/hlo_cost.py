@@ -265,13 +265,22 @@ def analyze_hlo(text: str) -> Cost:
         return tot
 
     def _first_operand_shape(ins: _Instruction, shapes_map) -> Optional[str]:
-        m = re.search(r"\(\s*([^,)]+)", ins.rhs[ins.rhs.find("("):])
-        if not m:
+        # Operands may be bare references ("%dot.1, ...") or inline-typed
+        # ("f32[128,128]{1,0} %p, ..."); a naive split on "," would truncate
+        # the type at the comma *inside* the dims brackets, losing the
+        # contracting-dim size (scan bodies hit this: their dot operands are
+        # always inline-typed get-tuple-elements).
+        start = ins.rhs.find("(")
+        if start < 0:
             return None
-        tok = m.group(1).strip()
-        if tok.startswith("%"):
-            return shapes_map.get(tok)
-        return tok  # inline-typed operand
+        arg = ins.rhs[start + 1 :].lstrip()
+        m = _SHAPE_RE.match(arg)
+        if m:
+            return m.group(0)  # inline-typed operand
+        m = re.match(r"%[\w.\-]+", arg)
+        if m:
+            return shapes_map.get(m.group(0))
+        return None
 
     def _dims_of(type_str: str) -> List[int]:
         m = _SHAPE_RE.search(type_str)

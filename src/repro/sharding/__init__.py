@@ -1,5 +1,20 @@
-"""Partition rules: DP/TP/EP/SP/FSDP over the production mesh."""
+"""Partition rules (DP/TP/EP/SP/FSDP) + the pencil-decomposed distributed FFT."""
 
+from repro.sharding.dist_fft import (
+    ShardedField,
+    pencil_irfftn,
+    pencil_rfftn,
+    validate_pencil_shape,
+)
 from repro.sharding.rules import batch_pspec, cache_pspecs, param_pspecs, to_shardings
 
-__all__ = ["param_pspecs", "cache_pspecs", "batch_pspec", "to_shardings"]
+__all__ = [
+    "param_pspecs",
+    "cache_pspecs",
+    "batch_pspec",
+    "to_shardings",
+    "ShardedField",
+    "pencil_rfftn",
+    "pencil_irfftn",
+    "validate_pencil_shape",
+]

@@ -1,0 +1,230 @@
+"""Distributed pencil-decomposed rFFT: bitwise parity with the single-device
+path, on 2- and 8-device CPU meshes.
+
+The multi-device checks run in a subprocess (XLA_FLAGS must be set before jax
+imports — same pattern as tests/test_distributed.py) and report JSON; the
+shape-validation checks are pure functions and run in-process.
+
+The parity bar extends PR 2's batched-vs-sharded discipline to whole fields:
+``pencil_rfftn`` must equal the fused ``jnp.fft.rfftn`` bit for bit, and
+``FFCz.compress`` of a :class:`ShardedField` must emit the byte-identical
+blob the single-device path emits, for scalar (``Delta_abs``) and pointwise
+(``pspec_rel``) bounds alike.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.sharding.dist_fft import local_freq_shape, validate_pencil_shape
+
+_CHILD_SCRIPT = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+from repro.compressors import get_compressor
+from repro.core.ffcz import FFCz, FFCzConfig, ShardedField
+from repro.core.spectrum import power_spectrum
+from repro.sharding.dist_fft import pencil_irfftn, pencil_rfftn
+
+out = {"n_dev": len(jax.devices())}
+rng = np.random.default_rng(7)
+
+# --- transform parity: decomposed+distributed == fused single-device, bitwise
+x3 = rng.standard_normal((32, 16, 12)).astype(np.float32)
+x2 = rng.standard_normal((32, 62)).astype(np.float32)
+for name, x in (("3d", x3), ("2d", x2)):
+    field = ShardedField.shard(x)
+    X = pencil_rfftn(field)
+    fused = jnp.fft.rfftn(jnp.asarray(x))
+    out[f"fwd_bitwise_{name}"] = bool(np.array_equal(np.asarray(X), np.asarray(fused)))
+    back = pencil_irfftn(X, x.shape, field.mesh, field.axis_name)
+    ref = jnp.fft.irfftn(fused, s=x.shape).astype(jnp.float32)
+    out[f"inv_bitwise_{name}"] = bool(np.array_equal(np.asarray(back), np.asarray(ref)))
+    out[f"roundtrip_close_{name}"] = bool(
+        np.allclose(np.asarray(back), x, atol=1e-5 * np.abs(x).max())
+    )
+
+# --- FFCz blob parity: sharded compress == single-device compress, bytewise
+f3 = (rng.standard_normal((32, 16, 12)) * 0.5 + 5.0).astype(np.float32).cumsum(axis=0)
+cfgs = {
+    "Delta_abs": FFCzConfig(
+        E_rel=1e-3,
+        Delta_rel=None,
+        Delta_abs=float(np.abs(np.fft.fftn(f3)).max() * 1e-3),
+    ),
+    "pspec": FFCzConfig(E_rel=1e-3, Delta_rel=None, pspec_rel=1e-3, max_iters=1500),
+}
+for name, cfg in cfgs.items():
+    c = FFCz(get_compressor("szlike"), cfg)
+    blob_single = c.compress(f3)
+    blob_sharded = c.compress(ShardedField.shard(f3))
+    out[f"blob_bitwise_{name}"] = blob_single.to_bytes() == blob_sharded.to_bytes()
+    out[f"converged_{name}"] = bool(blob_sharded.stats.converged)
+    out[f"margins_ok_{name}"] = bool(
+        blob_sharded.stats.spatial_margin >= 0 and blob_sharded.stats.frequency_margin >= 0
+    )
+    dec = c.decompress(blob_single)
+    dec_sharded = c.decompress_sharded(blob_sharded)
+    out[f"decompress_bitwise_{name}"] = bool(
+        np.array_equal(np.asarray(dec_sharded.array), dec)
+    )
+
+# 2-D field through the full codec as well (half axis is the sharded one)
+f2 = (rng.standard_normal((32, 62)) * 0.1).astype(np.float32).cumsum(axis=1)
+c = FFCz(get_compressor("zfplike"), FFCzConfig(E_rel=1e-3, Delta_rel=1e-3))
+out["blob_bitwise_2d"] = c.compress(f2).to_bytes() == c.compress(ShardedField.shard(f2)).to_bytes()
+
+# non-power-of-two c2c axes: outside the bitwise contract (strict_bitwise
+# rejects them), but with the opt-out the bounds must still hold exactly —
+# and the blob must stay decodable to a mesh-resident field (the scatter
+# runs no distributed FFT, so decompress_sharded skips the strict check)
+f4 = (rng.standard_normal((24, 24, 10)) * 0.3 + 4.0).astype(np.float32).cumsum(axis=2)
+c = FFCz(get_compressor("szlike"), FFCzConfig(E_rel=1e-3, Delta_rel=1e-3))
+blob_ns = c.compress(ShardedField.shard(f4, strict_bitwise=False))
+out["nonstrict_bounds_hold"] = bool(
+    blob_ns.stats.spatial_margin >= 0 and blob_ns.stats.frequency_margin >= 0
+)
+out["nonstrict_decompress_bitwise"] = bool(
+    np.array_equal(np.asarray(c.decompress_sharded(blob_ns).array), c.decompress(blob_ns))
+)
+
+# --- sharded power spectrum: same shells to float tolerance (metric, not bound)
+k_ref, p_ref = power_spectrum(f3)
+k_sh, p_sh = power_spectrum(ShardedField.shard(f3))
+p_ref, p_sh = np.asarray(p_ref, np.float64), np.asarray(p_sh, np.float64)
+# shell 0 is the mean-normalized DC: ~0 by construction, pure cancellation noise
+out["pspec_shells_close"] = bool(
+    np.array_equal(np.asarray(k_ref), np.asarray(k_sh))
+    and np.allclose(p_ref[1:], p_sh[1:], rtol=1e-4)
+    and abs(p_sh[0]) <= 1e-6 * p_ref[1:].max()
+)
+
+print("RESULTS:" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module", params=[2, 8])
+def dist_results(request):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD_SCRIPT % request.param],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULTS:")][0]
+    return json.loads(line[len("RESULTS:") :]), request.param
+
+
+class TestPencilTransformParity:
+    def test_mesh_size(self, dist_results):
+        results, n_dev = dist_results
+        assert results["n_dev"] == n_dev
+
+    def test_rfftn_bitwise_equals_fused(self, dist_results):
+        results, _ = dist_results
+        assert results["fwd_bitwise_3d"]
+        assert results["fwd_bitwise_2d"]
+
+    def test_irfftn_bitwise_equals_fused(self, dist_results):
+        results, _ = dist_results
+        assert results["inv_bitwise_3d"]
+        assert results["inv_bitwise_2d"]
+
+    def test_roundtrip_recovers_field(self, dist_results):
+        results, _ = dist_results
+        assert results["roundtrip_close_3d"]
+        assert results["roundtrip_close_2d"]
+
+
+class TestShardedCompressParity:
+    def test_delta_abs_blob_bitwise(self, dist_results):
+        results, _ = dist_results
+        assert results["blob_bitwise_Delta_abs"]
+        assert results["converged_Delta_abs"] and results["margins_ok_Delta_abs"]
+
+    def test_pspec_blob_bitwise(self, dist_results):
+        results, _ = dist_results
+        assert results["blob_bitwise_pspec"]
+        assert results["converged_pspec"] and results["margins_ok_pspec"]
+
+    def test_2d_blob_bitwise(self, dist_results):
+        results, _ = dist_results
+        assert results["blob_bitwise_2d"]
+
+    def test_decompress_sharded_bitwise(self, dist_results):
+        results, _ = dist_results
+        assert results["decompress_bitwise_Delta_abs"]
+        assert results["decompress_bitwise_pspec"]
+
+
+class TestShardedPowerSpectrum:
+    def test_shells_match_gathered(self, dist_results):
+        results, _ = dist_results
+        assert results["pspec_shells_close"]
+
+
+class TestNonStrictBitwise:
+    def test_bounds_hold_outside_bitwise_contract(self, dist_results):
+        results, _ = dist_results
+        assert results["nonstrict_bounds_hold"]
+
+    def test_nonstrict_blob_decodes_to_mesh(self, dist_results):
+        results, _ = dist_results
+        assert results["nonstrict_decompress_bitwise"]
+
+
+class TestShapeValidation:
+    def test_rank_rejected(self):
+        with pytest.raises(ValueError, match="rank"):
+            validate_pencil_shape((128,), 2)
+        with pytest.raises(ValueError, match="rank"):
+            validate_pencil_shape((8, 8, 8, 8), 2)
+
+    def test_axis0_divisibility_message(self):
+        with pytest.raises(ValueError, match="axis 0 .30. is not divisible"):
+            validate_pencil_shape((30, 16, 12), 8)
+
+    def test_axis1_divisibility_message(self):
+        with pytest.raises(ValueError, match="axis 1 .12. is not divisible"):
+            validate_pencil_shape((32, 12, 16), 8)
+
+    def test_2d_half_axis_message(self):
+        # N1 = 48 -> 25 half components: not divisible by 8
+        with pytest.raises(ValueError, match="half axis"):
+            validate_pencil_shape((32, 48), 8)
+
+    def test_non_power_of_two_c2c_axis_rejected_when_strict(self):
+        # divisible by the mesh, but the fused inverse's 1/24 normalization
+        # is not placement-invariant -> bitwise parity unattainable
+        with pytest.raises(ValueError, match="power of two"):
+            validate_pencil_shape((24, 16, 12), 8)
+        with pytest.raises(ValueError, match="power of two"):
+            validate_pencil_shape((32, 24, 12), 8)
+
+    def test_non_power_of_two_accepted_with_opt_out(self):
+        validate_pencil_shape((24, 24, 10), 8, strict_bitwise=False)
+
+    def test_last_axis_unconstrained(self):
+        # the c2r axis scale sits inside one final pass either way: any
+        # length is bitwise-safe (12 and 15 are not powers of two)
+        validate_pencil_shape((32, 16, 12), 8)
+        validate_pencil_shape((32, 16, 15), 8)
+
+    def test_divisible_shapes_accepted(self):
+        validate_pencil_shape((32, 16, 12), 8)
+        validate_pencil_shape((32, 62), 8)  # H = 32
+
+    def test_local_freq_shape(self):
+        assert local_freq_shape((32, 16, 12), (4, 16, 12)) == (4, 16, 7)
+        assert local_freq_shape((32, 62), (4, 62)) == (32, 4)
