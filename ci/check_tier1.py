@@ -38,12 +38,21 @@ def main() -> int:
         default=None,
         help="also write a junit xml report here (uploaded as a CI artifact)",
     )
+    ap.add_argument(
+        "--xdist",
+        action="store_true",
+        help="run the suite under pytest-xdist (-n auto); the deterministic "
+        "hypothesis CI profile (tests/conftest.py) keeps randomized tests "
+        "reproducible across workers",
+    )
     args = ap.parse_args()
 
     with open(args.known) as f:
         known = {ln.strip() for ln in f if ln.strip() and not ln.startswith("#")}
 
     cmd = [sys.executable, "-m", "pytest", "-q", "--tb=no", "-rEf"]
+    if args.xdist:
+        cmd += ["-n", "auto"]
     if args.junit:
         cmd.append(f"--junitxml={args.junit}")
     proc = subprocess.run(

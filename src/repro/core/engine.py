@@ -225,14 +225,18 @@ class FieldResult:
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_field_pocs_fn(mesh, ax: str, gshape, pointwise: bool, max_iters: int, relax: float):
-    """Compiled sharded whole-field POCS program, cached per (mesh, layout).
+def _sharded_field_pocs_fn(mesh, spec, pointwise: bool, max_iters: int, relax: float):
+    """Compiled sharded whole-field POCS program, cached per (mesh, DistSpec).
 
     Scalar bounds enter as replicated operands so re-planning the same field
     shape (or a new field of the same shape) reuses the compiled while_loop
     instead of retracing — the whole-field analogue of ``_pencil_fft_fn``.
+    Arrays cross the boundary in the PADDED device layout; slab-pad rows are
+    exactly zero and stay zero through the loop (see
+    :mod:`repro.sharding.dist_fft`).
     """
-    fspec = dist_fft.freq_partition_spec(len(gshape), ax)
+    ax = spec.axis_name
+    fspec = dist_fft.freq_partition_spec(len(spec.gshape), ax)
     d_spec = fspec if pointwise else P()
 
     def run(e_loc, d_loc, E, slack):
@@ -243,7 +247,7 @@ def _sharded_field_pocs_fn(mesh, ax: str, gshape, pointwise: bool, max_iters: in
             max_iters=max_iters,
             relax=relax,
             check_slack=slack,
-            dist=(ax, gshape),
+            dist=spec,
         )
 
     out_specs = AlternatingProjectionResult(
@@ -326,28 +330,45 @@ class CorrectionEngine:
         keeps host-float64 resolution — see :meth:`plan_pencils` — because
         its per-pencil Delta is a convention external tools recompute.)
         """
-        if isinstance(x, ShardedField):
+        sharded = isinstance(x, ShardedField)
+        E_abs_eff, E_rel_eff = cfg.E_abs, cfg.E_rel
+        if sharded:
             x32, x_dev = x.to_host(), x.array
             rfftn = lambda _dev: dist_fft.pencil_rfftn(x)  # noqa: E731
+            if E_abs_eff is None and E_rel_eff is not None:
+                # The device array carries zero slab-pad rows, which would
+                # corrupt the E_rel range reduction (min picks up the pad).
+                # max/min/subtract/multiply are all single correctly-rounded
+                # float32 ops, so the host staging copy reproduces the
+                # on-device reduction of the unpadded field bitwise.
+                rng32 = np.max(x32) - np.min(x32)
+                E_abs_eff, E_rel_eff = np.float32(cfg.E_rel) * np.float32(rng32), None
         else:
             x32 = np.asarray(x, dtype=np.float32)
             x_dev = jnp.asarray(x32)
             rfftn = jnp.fft.rfftn
         if cfg.pspec_rel is not None:
+            # the padded sharded spectrum's pad rows are exactly zero, so the
+            # grid max / floor / DC reductions below see the same values as
+            # the single-device path; the stored grid is sliced to the true
+            # half-spectrum extents
             X = rfftn(x_dev)
             grid = power_spectrum_delta_rfft(X, cfg.pspec_rel)
             gmax = float(jnp.max(grid))
             floor = gmax * cfg.pspec_floor_rel if gmax > 0 else 1.0
             Delta_user = np.asarray(jnp.maximum(grid, floor), dtype=np.float32)
-            bounds = resolve_bounds(x_dev, E_abs=cfg.E_abs, E_rel=cfg.E_rel, Delta_abs=1.0)
+            if sharded:
+                Delta_user = x.unpad_freq(Delta_user)
+            bounds = resolve_bounds(x_dev, E_abs=E_abs_eff, E_rel=E_rel_eff, Delta_abs=1.0)
             pointwise = True
         elif cfg.Delta_abs is not None:
-            bounds = resolve_bounds(x_dev, E_abs=cfg.E_abs, E_rel=cfg.E_rel, Delta_abs=cfg.Delta_abs)
+            bounds = resolve_bounds(x_dev, E_abs=E_abs_eff, E_rel=E_rel_eff, Delta_abs=cfg.Delta_abs)
             Delta_user = float(bounds.Delta)
             pointwise = False
         else:
+            # Delta_rel needs max_k |X_k|: zero pad rows never raise a max
             X = rfftn(x_dev)
-            bounds = resolve_bounds(x_dev, E_abs=cfg.E_abs, E_rel=cfg.E_rel, Delta_rel=cfg.Delta_rel, X=X)
+            bounds = resolve_bounds(x_dev, E_abs=E_abs_eff, E_rel=E_rel_eff, Delta_rel=cfg.Delta_rel, X=X)
             Delta_user = float(bounds.Delta)
             pointwise = False
         E = float(bounds.E)
@@ -441,7 +462,8 @@ class CorrectionEngine:
         the single-device program (see :mod:`repro.sharding.dist_fft`), so
         the edit streams — and the blobs built from them — match exactly.
         """
-        if isinstance(eps0, ShardedField):
+        sharded = isinstance(eps0, ShardedField)
+        if sharded:
             res = self._pocs_field_sharded(eps0, plan)
         else:
             res = alternating_projection(
@@ -455,10 +477,18 @@ class CorrectionEngine:
             )
         # edit state -> host: this is the encode/serialization staging (the
         # single-device path stages identically); the float64 polish is a
-        # handful of host FFT round trips on the O(residual) edit state
+        # handful of host FFT round trips on the O(residual) edit state.
+        # Sharded state arrives in the padded device layout — slab-pad
+        # rows/columns are exactly zero; slicing them away here restores the
+        # single-device shapes (and values, bitwise on "bitwise"-parity
+        # shapes) before the polish and encode stages.
         spat = np.asarray(res.spat_edits, dtype=np.float64)
         freq = np.asarray(res.freq_edits, dtype=np.complex128)
         eps_f = np.asarray(res.eps, dtype=np.float64)
+        if sharded:
+            spat = eps0.unpad_spatial(spat)
+            eps_f = eps0.unpad_spatial(eps_f)
+            freq = eps0.unpad_freq(freq)
         eps_f, spat, freq = polish_pocs_float64(
             eps_f, spat, freq, plan.E_proj, np.asarray(plan.Delta_proj, dtype=np.float64)
         )
@@ -474,19 +504,21 @@ class CorrectionEngine:
         """The whole-field POCS while_loop under ``shard_map`` (dist mode)."""
         if plan.use_kernels:
             raise ValueError("use_kernels is not supported for sharded whole fields")
-        mesh, ax, gshape = eps0.mesh, eps0.axis_name, eps0.shape
+        mesh = eps0.mesh
         if plan.pointwise:
             # pre-round the float64 plan grid to float32 on host (the same
             # IEEE rounding jnp.asarray applies on the single-device path),
-            # then scatter straight into the frequency layout
+            # zero-pad it to the device layout (pad components are exactly
+            # zero in the loop, so their bound value is inert), then scatter
+            # straight into the frequency layout
             delta_op = jax.device_put(
-                np.asarray(plan.Delta_proj, dtype=np.float32),
+                eps0.pad_freq_np(np.asarray(plan.Delta_proj, dtype=np.float32)),
                 NamedSharding(mesh, eps0.freq_spec),
             )
         else:
             delta_op = jnp.float32(plan.Delta_proj)
         fn = _sharded_field_pocs_fn(
-            mesh, ax, gshape, plan.pointwise, plan.max_iters, plan.relax
+            mesh, eps0.dist_spec, plan.pointwise, plan.max_iters, plan.relax
         )
         # scalar bounds ride as replicated operands (pre-rounded to the f32
         # values the single-device trace uses), so same-shape fields with

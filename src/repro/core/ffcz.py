@@ -59,6 +59,7 @@ __all__ = [
     "FFCzBlob",
     "FFCzConfig",
     "FFCzStats",
+    "PadMeta",
     "ShardedField",
     "adaptive_quant_bits",
     "float32_bound_discipline",
@@ -122,6 +123,45 @@ class FFCzStats:
 _MAGIC = b"FFCZ"
 _WIRE_VERSION = 1
 _V0_HEADER = "<ddBQQQQ"  # E, Delta_scalar, ndim, len(base), len(se), len(fe), len(pw)
+_PAD_MAGIC = b"FFCP"
+_PAD_HEADER = "<IB"  # n_dev (u32), ndim (u8); then ndim * u64 padded shape
+
+
+@dataclasses.dataclass(frozen=True)
+class PadMeta:
+    """Slab-decomposition provenance of a blob written from an uneven
+    :class:`~repro.sharding.dist_fft.ShardedField`.
+
+    Purely informational: the edit streams are always encoded at the true
+    field extents, so decoding never needs this — it records how the writer
+    padded and sharded the field (mesh axis size + padded device shape) for
+    tooling and re-scatter hints.  Serialized as an OPTIONAL trailing blob
+    section introduced by a ``FFCP`` marker, sniffed by its presence exactly
+    like the v0 magic sniff — older v1 blobs (no section) and v0 blobs
+    parse unchanged, and this section's absence keeps evenly-decomposed and
+    single-device blobs byte-identical to pre-pad writers.
+    """
+
+    n_dev: int
+    padded_shape: tuple
+
+    def to_bytes(self) -> bytes:
+        return (
+            _PAD_MAGIC
+            + struct.pack(_PAD_HEADER, self.n_dev, len(self.padded_shape))
+            + struct.pack(f"<{len(self.padded_shape)}Q", *self.padded_shape)
+        )
+
+    @staticmethod
+    def from_bytes(data: bytes) -> "PadMeta":
+        head = len(_PAD_MAGIC) + struct.calcsize(_PAD_HEADER)
+        if len(data) < head or data[: len(_PAD_MAGIC)] != _PAD_MAGIC:
+            raise ValueError("corrupt FFCz blob: trailing bytes are not a pad-metadata section")
+        n_dev, ndim = struct.unpack_from(_PAD_HEADER, data, len(_PAD_MAGIC))
+        if ndim > 16 or len(data) != head + 8 * ndim:
+            raise ValueError("corrupt FFCz blob: malformed pad-metadata section")
+        shape = struct.unpack_from(f"<{ndim}Q", data, head)
+        return PadMeta(n_dev=n_dev, padded_shape=tuple(shape))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,12 +172,16 @@ class FFCzBlob:
 
         b"FFCZ" | u8 version | <ddBQQQQ> E, Delta, ndim, nb, ns, nf, npw
         | ndim * u64 shape | base | spat_edits | freq_edits | pointwise
+        [| b"FFCP" pad-metadata section]
 
     :meth:`from_bytes` length-validates every section against the payload
     and raises ``ValueError`` on truncated or foreign bytes.  Blobs written
     before the magic was introduced (version 0) start directly with the
     ``<ddBQQQQ>`` header; they are sniffed by the absent magic and decode
-    unchanged.
+    unchanged.  The optional trailing :class:`PadMeta` section (uneven
+    sharded writers only) is sniffed the same way — by its ``FFCP`` marker
+    at the end of the core sections — so pad-free v1 blobs parse unchanged
+    in both directions.
     """
 
     base_blob: bytes
@@ -153,6 +197,9 @@ class FFCzBlob:
     pointwise_delta: Optional[bytes]
     shape: tuple
     stats: Optional[FFCzStats] = None
+    # Optional slab-decomposition provenance (uneven sharded writers only);
+    # informational — see PadMeta.
+    pad_meta: Optional[PadMeta] = None
 
     def to_bytes(self) -> bytes:
         se = self.spat_edits.to_bytes()
@@ -170,7 +217,15 @@ class FFCzBlob:
             len(pw),
         )
         header += struct.pack(f"<{len(self.shape)}Q", *self.shape)
-        return header + self.base_blob + se + fe + pw
+        tail = self.pad_meta.to_bytes() if self.pad_meta is not None else b""
+        return header + self.base_blob + se + fe + pw + tail
+
+    def payload_bytes(self) -> bytes:
+        """Blob bytes with the informational pad-metadata tail stripped —
+        the unit of cross-backend byte parity for ``"bitwise"`` shapes."""
+        if self.pad_meta is None:
+            return self.to_bytes()
+        return dataclasses.replace(self, pad_meta=None).to_bytes()
 
     @staticmethod
     def from_bytes(data: bytes) -> "FFCzBlob":
@@ -198,10 +253,15 @@ class FFCzBlob:
         shape = struct.unpack_from(f"<{ndim}Q", data, off)
         off += 8 * ndim
         expected = off + nb + ns + nf + npw
-        if len(data) != expected:
+        if len(data) < expected:
             raise ValueError(
                 f"corrupt FFCz blob: {len(data)} bytes, section table wants {expected}"
             )
+        # optional trailing pad-metadata section, sniffed by its FFCP marker
+        # (absent in v0 and pad-free v1 blobs); any other tail is corruption
+        pad_meta = None
+        if len(data) > expected:
+            pad_meta = PadMeta.from_bytes(data[expected:])
         base = data[off : off + nb]
         off += nb
         se = EncodedEdits.from_bytes(data[off : off + ns])
@@ -217,6 +277,7 @@ class FFCzBlob:
             Delta_scalar=Delta,
             pointwise_delta=pw,
             shape=tuple(shape),
+            pad_meta=pad_meta,
         )
 
     def nbytes(self) -> int:
@@ -264,9 +325,20 @@ class FFCz:
 
         eps0 = x_hat - x32
         if sharded:
-            eps0 = ShardedField(eps0, x.mesh, x.axis_name, x.strict_bitwise)
+            eps0 = ShardedField(
+                eps0, x.mesh, x.axis_name, x.parity_requested, x.overlap_chunks
+            )
         result = self.engine.execute_field(eps0, plan)
         se, fe = self.engine.encode_field(result, plan)
+
+        # Provenance for uneven slab decompositions: record how the field was
+        # padded/sharded at write time.  Optional (absent for single-device
+        # and evenly divisible writes, keeping those blobs byte-identical to
+        # pre-pad writers) and ignored by decompress — the edit streams are
+        # always encoded at the true extents.
+        pad_meta = None
+        if sharded and x.padded_shape != x.shape:
+            pad_meta = PadMeta(n_dev=x.n_dev, padded_shape=x.padded_shape)
 
         blob = FFCzBlob(
             base_blob=base_blob,
@@ -276,6 +348,7 @@ class FFCz:
             Delta_scalar=plan.delta_scalar,
             pointwise_delta=plan.pointwise_bytes(),
             shape=plan.shape,
+            pad_meta=pad_meta,
         )
 
         stats = None
@@ -327,24 +400,30 @@ class FFCz:
         blob: FFCzBlob,
         mesh=None,
         axis_name: str = "data",
-        strict_bitwise: bool = False,
+        parity="auto",
+        strict_bitwise: Optional[bool] = None,
     ) -> ShardedField:
         """Decode a blob to a field resident on the mesh (slab-sharded, axis 0).
 
         Decoding itself is host-bound: the blob sections are host bytes, and
         the complete-spatial-edits inverse must run in float64 for the stored
         dual-bound guarantees to verify exactly (the device path is float32).
-        The reconstructed field is scattered straight to its slabs, so the
-        result is bitwise identical to :meth:`decompress` while landing
-        device-resident for distributed consumers.
+        The reconstructed field is scattered straight to its slabs (uneven
+        extents re-pad automatically), so the result is bitwise identical to
+        :meth:`decompress` while landing device-resident for distributed
+        consumers.
 
-        ``strict_bitwise`` defaults to False here — the scatter runs no
+        ``parity`` defaults to ``"auto"`` here — the scatter runs no
         distributed FFT, so the power-of-two bitwise precondition is
-        irrelevant to decoding (and blobs written via the
-        ``strict_bitwise=False`` compress opt-out must stay decodable).
+        irrelevant to decoding (and blobs written from ``"bound"``-parity
+        fields must stay decodable).  A blob's :class:`PadMeta` (if any) is
+        informational and not consulted: the target decomposition comes from
+        ``mesh``, which need not match the writer's.
         """
         x = self.decompress(blob)
-        return ShardedField.shard(x, mesh, axis_name=axis_name, strict_bitwise=strict_bitwise)
+        return ShardedField.shard(
+            x, mesh, axis_name=axis_name, parity=parity, strict_bitwise=strict_bitwise
+        )
 
     def roundtrip(self, x):
         blob = self.compress(x)

@@ -37,21 +37,25 @@ so POCS converges; ``max_iters`` guards the tangential-intersection slow case
 (paper §III), after which a final s-cube projection guarantees the spatial
 bound and the residual frequency excess is reported.
 
-Distributed pencil mode (``dist=(axis_name, global_shape)``): the loop body
-runs on a *local slab* inside a ``shard_map`` region, with the FFT pair
-replaced by the pencil-decomposed transforms of
-:mod:`repro.sharding.dist_fft` (all_to_all transposes between per-axis
-passes) and the convergence count reduced with an integer ``psum``.  The
-per-axis pass order matches the fused single-device transform bitwise, so a
-sharded whole-field loop reproduces the single-device trajectory exactly —
-the whole-field analogue of the PR 2 batched-vs-sharded parity bar.
+Distributed pencil mode (``dist=DistSpec(...)``): the loop body runs on a
+*local slab* inside a ``shard_map`` region, with the FFT pair replaced by
+the pencil-decomposed transforms of :mod:`repro.sharding.dist_fft`
+(zero-padded all_to_all transposes between per-axis passes — any axis
+extents, uneven slabs included) and the convergence count reduced with an
+integer ``psum``.  Slab-pad rows of the local state are exactly zero and
+stay exactly zero through the loop (clips and FFTs are zero-preserving, the
+strict-inequality violation test never fires on zeros), so no pad masking
+is needed in the body.  The per-axis pass order matches the fused
+single-device transform bitwise, so a sharded whole-field loop reproduces
+the single-device trajectory exactly on ``"bitwise"``-parity shapes — the
+whole-field analogue of the PR 2 batched-vs-sharded parity bar.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -88,7 +92,7 @@ def _alternating_projection(
     relax: float = 1.0,
     check_slack=0.0,
     use_rfft: bool = True,
-    dist: Optional[Tuple[str, Tuple[int, ...]]] = None,
+    dist: Optional[Any] = None,
 ) -> AlternatingProjectionResult:
     """Run Alg. 1 from an initial spatial error vector ``eps0``.
 
@@ -114,13 +118,14 @@ def _alternating_projection(
       use_rfft: run the loop on the Hermitian half-spectrum (the fast path;
         ``freq_edits`` then has rfft layout).  False keeps the full
         complex-FFT oracle.
-      dist: ``(mesh_axis_name, global_shape)`` — run the loop on a local slab
-        inside a ``shard_map`` region with the pencil-decomposed distributed
-        transforms (``eps0`` is then the local block, ``freq_edits`` the
-        local half-spectrum block, and a pointwise ``Delta`` must already be
-        the local frequency block).  Callers inside ``shard_map`` use the
-        undecorated :func:`_alternating_projection` under the region's outer
-        jit.
+      dist: a :class:`repro.sharding.dist_fft.DistSpec` — run the loop on a
+        local slab inside a ``shard_map`` region with the pencil-decomposed
+        distributed transforms (``eps0`` is then the local block — slab-pad
+        rows zero, ``freq_edits`` the local half-spectrum block, and a
+        pointwise ``Delta`` must already be the local frequency block,
+        zero-padded to it).  Callers inside ``shard_map`` use the
+        undecorated :func:`_alternating_projection` under the region's
+        outer jit.
 
     Returns an :class:`AlternatingProjectionResult` pytree.
     """
@@ -135,16 +140,16 @@ def _alternating_projection(
             raise ValueError("dist mode supports only the pure-jnp rfft path")
         from repro.sharding import dist_fft as _dfft
 
-        axis_name, gshape = dist
+        axis_name, gshape = dist.axis_name, dist.gshape
         weights = None
-        freq_shape = _dfft.local_freq_shape(gshape, shape)
+        freq_shape = _dfft.local_freq_shape(gshape, dist.n_dev)
         if Delta_r.ndim and Delta_r.shape != freq_shape:
             raise ValueError(
                 f"dist mode needs a scalar Delta or the local half-spectrum block "
                 f"{freq_shape}, got {Delta_r.shape}"
             )
-        fwd = lambda e: _dfft.rfftn_local(e, axis_name, gshape).astype(cdtype)  # noqa: E731
-        inv = lambda d: _dfft.irfftn_local(d, axis_name, gshape).astype(eps0.dtype)  # noqa: E731
+        fwd = lambda e: _dfft.rfftn_local(e, dist).astype(cdtype)  # noqa: E731
+        inv = lambda d: _dfft.irfftn_local(d, dist).astype(eps0.dtype)  # noqa: E731
     elif use_rfft:
         # pair weights are only consumed by the fused kernel's reduction;
         # the jnp branch uses the cheaper 2*sum - self-conjugate-planes form

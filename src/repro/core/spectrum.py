@@ -63,39 +63,63 @@ def power_spectrum_sharded(field) -> Tuple[jnp.ndarray, jnp.ndarray]:
     sums re-associate across shardings; this is a metric, not a bound).
     """
     k_max = min(field.shape) // 2
-    fn = _power_spectrum_sharded_fn(field.mesh, field.axis_name, field.shape)
+    fn = _power_spectrum_sharded_fn(field.mesh, field.dist_spec)
     return jnp.arange(k_max + 1), fn(field.array)
 
 
 @functools.lru_cache(maxsize=None)
-def _power_spectrum_sharded_fn(mesh, ax: str, gshape):
-    """Compiled distributed shell-binning program, cached per (mesh, shape)."""
+def _power_spectrum_sharded_fn(mesh, spec):
+    """Compiled distributed shell-binning program, cached per (mesh, DistSpec).
+
+    Pad-aware: the local slab carries zero pad rows (uneven decomposition),
+    which the mean-fluctuation normalization would turn into ``-1`` rows —
+    they are masked back to zero before the transform, and the shell weights
+    exclude pad rows/columns of the half-spectrum (their power is exactly
+    zero, so the masking is belt-and-braces for the weights and load-bearing
+    only for the normalization).
+    """
     from jax.sharding import PartitionSpec as P
 
     from repro.sharding import dist_fft
     from repro.sharding.shardmap import shard_map
 
+    ax, gshape = spec.axis_name, spec.gshape
     nd = len(gshape)
     n_total = float(np.prod(gshape))
     k_max = min(gshape) // 2
 
     def body(local):
+        # slab-pad rows are zero, so the sum needs no mask; n_total is the
+        # TRUE element count
         mean = jax.lax.psum(jnp.sum(local), ax) / n_total
         xp = (local - mean) / jnp.where(mean == 0, 1.0, mean)
-        Xh = dist_fft.rfftn_local(xp, ax, gshape)
+        # masked normalization: pad rows of (local - mean)/mean are -1, not 0
+        row = jax.lax.axis_index(ax) * local.shape[0] + jnp.arange(local.shape[0])
+        row_ok = (row < gshape[0]).reshape((-1,) + (1,) * (nd - 1))
+        xp = jnp.where(row_ok, xp, 0.0)
+        Xh = dist_fft.rfftn_local(xp, spec)
         w = dist_fft.local_pair_weights(gshape, Xh.shape, ax)
         power = (jnp.abs(Xh) ** 2) * w.astype(jnp.float32)
         coords = []
+        pad_ok = jnp.ones((), dtype=bool)
         for a in range(nd):
             idx = jnp.arange(Xh.shape[a])
             if a == (0 if nd == 3 else nd - 1):  # the sharded spectrum axis
                 idx = idx + jax.lax.axis_index(ax) * Xh.shape[a]
+                # pad-excluding shell weights: half-spectrum pad rows (3-D)
+                # / transit-pad columns (2-D) are not spectrum components
+                n_true = gshape[0] if nd == 3 else gshape[-1] // 2 + 1
+                shape_a = [1] * nd
+                shape_a[a] = -1
+                pad_ok = pad_ok & (idx < n_true).reshape(shape_a)
+                idx = jnp.minimum(idx, n_true - 1)  # keep coords in range
             # fftshift convention of power_spectrum: bin k sits at signed
             # frequency ((k + n//2) % n) - n//2 (half axis: k itself)
             coords.append(((idx + gshape[a] // 2) % gshape[a]) - gshape[a] // 2)
         grids = jnp.meshgrid(*coords, indexing="ij")
         r = jnp.sqrt(sum(g.astype(jnp.float32) ** 2 for g in grids))
         shell = jnp.rint(r).astype(jnp.int32)
+        power = jnp.where(pad_ok, power, 0.0)
         pk = jnp.zeros(k_max + 1, dtype=power.dtype).at[jnp.clip(shell, 0, k_max)].add(
             jnp.where(shell <= k_max, power, 0.0)
         )

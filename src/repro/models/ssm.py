@@ -65,9 +65,13 @@ def _segsum_decay(dtA: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     cum = jnp.cumsum(dtA, axis=-2)  # (..., q, h)
     ci = jnp.swapaxes(cum, -1, -2)[..., :, :, None]  # (..., h, q, 1)
     cj = jnp.swapaxes(cum, -1, -2)[..., :, None, :]  # (..., h, 1, q)
-    diff = ci - cj
     q = dtA.shape[-2]
     mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    # Double-where: the masked-out (i < j) exponents are *positive* sums of
+    # |dtA| and overflow exp to inf for long chunks / large A, which turns the
+    # where's backward pass into inf * 0 = NaN.  Zeroing diff before exp keeps
+    # the untaken branch finite; in-mask values are untouched.
+    diff = jnp.where(mask, ci - cj, 0.0)
     L = jnp.where(mask, jnp.exp(diff), 0.0)
     return cum, L
 

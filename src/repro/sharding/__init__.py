@@ -1,7 +1,9 @@
 """Partition rules (DP/TP/EP/SP/FSDP) + the pencil-decomposed distributed FFT."""
 
 from repro.sharding.dist_fft import (
+    DistSpec,
     ShardedField,
+    classify_parity,
     pencil_irfftn,
     pencil_rfftn,
     validate_pencil_shape,
@@ -13,7 +15,9 @@ __all__ = [
     "cache_pspecs",
     "batch_pspec",
     "to_shardings",
+    "DistSpec",
     "ShardedField",
+    "classify_parity",
     "pencil_rfftn",
     "pencil_irfftn",
     "validate_pencil_shape",

@@ -2,8 +2,27 @@
 # real single CPU device.  Multi-device distribution tests run in a
 # subprocess that sets xla_force_host_platform_device_count itself
 # (tests/test_distributed.py).
+import os
+
 import numpy as np
 import pytest
+
+# Deterministic hypothesis profile for CI: fixed derivation (derandomize) so
+# the randomized conformance suite reproduces identically across runs and
+# pytest-xdist workers, with a CI-scoped example budget.  Loaded whenever CI
+# is set (GitHub Actions exports CI=true); override with HYPOTHESIS_PROFILE.
+# Tests that pass their own @settings keep those values — the profile fills
+# the unspecified ones.
+try:
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile(
+        "ci", max_examples=20, derandomize=True, deadline=None, print_blob=True
+    )
+    if os.environ.get("CI"):
+        _hyp_settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ModuleNotFoundError:
+    pass
 
 
 @pytest.fixture(scope="session")

@@ -253,3 +253,47 @@ class TestBlobWireFormat:
         assert np.array_equal(
             struct.unpack_from("<dd", raw, 5), struct.unpack_from("<dd", data, 0)
         )
+
+    def test_golden_uneven_v1_blob_with_pad_metadata(self):
+        """A checked-in v1 blob written from an uneven (15, 14, 10)
+        ShardedField on an 8-way mesh: its FFCP pad-metadata section must
+        parse, survive a rewrite byte-exactly, and decode bit-identically to
+        the recorded reconstruction — with both stored bounds holding."""
+        data = open(os.path.join(_DATA, "uneven_v1_blob.bin"), "rb").read()
+        blob = FFCzBlob.from_bytes(data)
+        assert blob.pad_meta is not None
+        assert blob.pad_meta.n_dev == 8
+        assert blob.pad_meta.padded_shape == (16, 14, 10)
+        assert blob.shape == (15, 14, 10)
+        assert blob.to_bytes() == data  # decode -> re-encode is stable
+        x = np.load(os.path.join(_DATA, "uneven_v1_input.npy"))
+        expected = np.load(os.path.join(_DATA, "uneven_v1_output.npy"))
+        c = FFCz(get_compressor("szlike"), FFCzConfig(E_rel=1e-3, Delta_rel=1e-3))
+        got = c.decompress(blob)
+        assert np.array_equal(got, expected)
+        eps = got.astype(np.float64) - x.astype(np.float64)
+        assert np.abs(eps).max() <= blob.E
+        d = np.fft.rfftn(eps)
+        assert max(np.abs(d.real).max(), np.abs(d.imag).max()) <= blob.Delta_scalar
+
+    def test_golden_padfree_v1_blob_still_decodes_byte_exactly(self):
+        """The pad-free v1 fixture (same field, single-device writer) has no
+        FFCP tail and must keep decoding byte-exactly now that the parser
+        sniffs for one."""
+        data = open(os.path.join(_DATA, "padfree_v1_blob.bin"), "rb").read()
+        blob = FFCzBlob.from_bytes(data)
+        assert blob.pad_meta is None
+        assert blob.to_bytes() == data
+        expected = np.load(os.path.join(_DATA, "padfree_v1_output.npy"))
+        c = FFCz(get_compressor("szlike"), FFCzConfig(E_rel=1e-3, Delta_rel=1e-3))
+        assert np.array_equal(c.decompress(blob), expected)
+
+    def test_pad_metadata_tail_corruption_raises(self):
+        data = open(os.path.join(_DATA, "uneven_v1_blob.bin"), "rb").read()
+        for junk in (data + b"x", data[:-1]):
+            with pytest.raises(ValueError):
+                FFCzBlob.from_bytes(junk)
+        # foreign (non-FFCP) tail on a pad-free blob is corruption too
+        clean = open(os.path.join(_DATA, "padfree_v1_blob.bin"), "rb").read()
+        with pytest.raises(ValueError, match="pad-metadata|corrupt"):
+            FFCzBlob.from_bytes(clean + b"JUNKJUNKJUNK")
