@@ -1,13 +1,25 @@
-"""Bench regression guard: the recorded BENCH_pocs.json must cover every
-case the benchmark emits.
+"""Bench regression guard: case-kind coverage + minimum-speedup thresholds.
 
 ``benchmarks/bench_pocs.py`` is the anchor for the perf claims in ROADMAP;
-when someone adds a bench case without refreshing the recorded numbers, the
-JSON silently stops describing the benchmark.  This check smoke-runs the
-benchmark in ``--quick`` mode (small shapes, few repeats — a correctness run,
-not a measurement) into a scratch file and fails if any emitted
-``(bench, path)`` case kind is missing from the checked-in BENCH_pocs.json.
-Shapes/sizes are not compared: quick mode deliberately shrinks them.
+this check gates it two ways:
+
+1. **Coverage** — smoke-runs the benchmark in ``--quick`` mode (small
+   shapes, few repeats — a correctness run, not a measurement) into a
+   scratch file and fails if any emitted ``(bench, path)`` case kind is
+   missing from the checked-in BENCH_pocs.json, or if a recorded kind is no
+   longer emitted (a silently dead case / failed subprocess leg).
+   Shapes/sizes are not compared: quick mode deliberately shrinks them.
+
+2. **Thresholds** — the COMMITTED BENCH_pocs.json (the measured full run,
+   not the quick smoke) must meet the per-case-kind minimum speedups in
+   ``THRESHOLDS`` below.  Someone refreshing the record after a perf
+   regression fails CI here instead of silently lowering the anchor.  Every
+   row of a kind must clear its bar (each recorded shape is a claim).
+
+   Noisy-container override: set ``FFCZ_BENCH_MIN_SCALE`` (a float in
+   (0, 1], e.g. ``0.85``) to scale all thresholds down when refreshing the
+   record on shared/noisy hardware, and say so in the commit message.  The
+   knob relaxes the gate; it never disables the coverage check.
 
 Usage:  PYTHONPATH=src python ci/check_bench.py
 """
@@ -24,14 +36,98 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 ROOT = os.path.dirname(HERE)
 RECORDED = os.path.join(ROOT, "BENCH_pocs.json")
 
+# (bench, path) -> (speedup field, minimum value, optional shape selector).
+# Bars sit under the values measured on the CI container so ordinary
+# run-to-run noise passes while a real regression (or a stale record after
+# one) fails:
+#   single/rfft            recorded ~1.37-1.49x  -> bar 1.25
+#   single/rfft-packed     the ISSUE 5 acceptance floor for the pack-trick
+#                          C2R path, pinned to the 512^2 case the criterion
+#                          names -> bar 1.15 there, sanity 1.0 elsewhere
+#                          (the C2R-vs-r2c gap the trick attacks swings
+#                          with the container's memory weather)
+#   engine_field           recorded ~1.15-2.07x  -> bar 1.05
+#   batched                recorded ~1.10-1.26x  -> bar 0.85 (CPU is
+#                          ~parity by design; the row guards collapse)
+# Interpret-mode pallas rows and fake-device sharded rows carry no bar:
+# their CPU numbers price emulation/core-sharing, not the claim.
+THRESHOLDS = {
+    ("single", "rfft"): [("speedup_rfft_vs_complex", 1.25, None)],
+    ("single", "rfft-packed"): [
+        ("speedup_packed_vs_xla", 1.15, [512, 512]),
+        ("speedup_packed_vs_xla", 1.0, None),
+    ],
+    ("engine_field", "engine-device"): [("speedup_engine_vs_host", 1.05, None)],
+    ("batched", "correct_batch"): [("speedup_batched_vs_loop", 0.85, None)],
+}
+
 
 def case_kinds(rows) -> set:
     return {(r.get("bench", "?"), r.get("path", "?")) for r in rows}
 
 
+def check_thresholds(rows) -> int:
+    scale = float(os.environ.get("FFCZ_BENCH_MIN_SCALE", "1.0"))
+    if not (0.0 < scale <= 1.0):
+        print(f"FFCZ_BENCH_MIN_SCALE must be in (0, 1], got {scale}")
+        return 1
+    rc = 0
+    checked = 0
+    matched = {
+        (kind, i): 0
+        for kind, entries in THRESHOLDS.items()
+        for i in range(len(entries))
+    }
+    for row in rows:
+        kind = (row.get("bench", "?"), row.get("path", "?"))
+        if kind not in THRESHOLDS:
+            continue
+        size = row.get("shape", row.get("size"))
+        where = f"bench={kind[0]} path={kind[1]} shape/size={size}"
+        for i, (field, floor, shape_sel) in enumerate(THRESHOLDS[kind]):
+            if shape_sel is not None and row.get("shape") != shape_sel:
+                continue
+            matched[(kind, i)] += 1
+            floor *= scale
+            got = row.get(field)
+            if got is None:
+                print(f"MISSING SPEEDUP FIELD: {where} has no {field!r}")
+                rc = 1
+                continue
+            checked += 1
+            if got < floor:
+                scaled = ""
+                if scale != 1.0:
+                    scaled = f" (scaled by FFCZ_BENCH_MIN_SCALE={scale})"
+                print(
+                    f"SPEEDUP BELOW THRESHOLD: {where}: "
+                    f"{field}={got:.3f} < {floor:.3f}{scaled}"
+                )
+                rc = 1
+    # every threshold entry must have matched at least one row — otherwise a
+    # shape change (or a kind vanishing from the record) would silently
+    # retire its bar while CI stays green
+    for (kind, i), n in sorted(matched.items()):
+        if n == 0:
+            field, floor, shape_sel = THRESHOLDS[kind][i]
+            sel = f" shape={shape_sel}" if shape_sel is not None else ""
+            print(
+                f"THRESHOLD MATCHED NO ROW: bench={kind[0]} path={kind[1]}{sel} "
+                f"({field} >= {floor}) — the record no longer carries the case "
+                f"this bar gates"
+            )
+            rc = 1
+    if rc == 0:
+        print(f"thresholds OK: {checked} recorded row(s) meet their minimum speedups")
+    return rc
+
+
 def main() -> int:
     with open(RECORDED) as f:
-        recorded = case_kinds(json.load(f)["rows"])
+        recorded_rows = json.load(f)["rows"]
+    recorded = case_kinds(recorded_rows)
+
+    rc = check_thresholds(recorded_rows)
 
     bench = os.path.join(ROOT, "benchmarks", "bench_pocs.py")
     with tempfile.TemporaryDirectory() as tmp:
@@ -54,7 +150,6 @@ def main() -> int:
     if not emitted:
         print("benchmark emitted no rows — smoke run did not measure anything")
         return 1
-    rc = 0
     missing = sorted(emitted - recorded)
     if missing:
         print(

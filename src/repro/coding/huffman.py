@@ -1,8 +1,12 @@
 """Canonical Huffman coding for quantized edit streams (paper §IV-B, [37]).
 
-Encoder is fully vectorized (bit scatter over numpy); decoder uses a
-lookup-table walk.  The paper chains Huffman with ZSTD; see
-:mod:`repro.coding.lossless` for the chained entry points.
+Encoder is fully vectorized (bit scatter over numpy); decoder is a fully
+vectorized canonical-code LUT walk: code windows at EVERY bit position are
+extracted at once from 32-bit reads of the packed stream, the LUT turns them
+into per-position (symbol, advance) pairs, and the sequential chain of
+decode positions is expanded with pointer doubling (log2(n) gather rounds)
+instead of a per-symbol Python loop.  The paper chains Huffman with ZSTD;
+see :mod:`repro.coding.lossless` for the chained entry points.
 
 Wire format (little-endian):
   u32  n_symbols_in_alphabet
@@ -19,6 +23,12 @@ import heapq
 import struct
 
 import numpy as np
+
+#: Bit-range chunk size of the vectorized decoder: bounds its per-position
+#: temporaries (~50 bytes live per bit, so ~50 MB per chunk at this size)
+#: however large the stream is.  Streams at most this long decode in one
+#: chunk.
+DECODE_CHUNK_BITS = 1 << 20
 
 
 def _code_lengths(freqs: np.ndarray) -> np.ndarray:
@@ -96,7 +106,22 @@ def huffman_encode(symbols: np.ndarray) -> bytes:
 
 
 def huffman_decode(data: bytes) -> np.ndarray:
-    """Inverse of :func:`huffman_encode`; returns int64 symbols."""
+    """Inverse of :func:`huffman_encode`; returns int64 symbols.
+
+    Vectorized canonical LUT walk (no per-symbol Python loop):
+
+    1. every bit position's next-``max_len``-bit window is read at once from
+       four-byte little loads of the packed stream (``max_len + 7 <= 32``);
+    2. the canonical LUT maps each window to its (symbol, code length), so
+       ``jump[p] = p + len`` is the whole decode automaton as one array;
+    3. the sequential position chain ``p_{i+1} = jump[p_i]`` is expanded by
+       pointer doubling — after round r the first ``2^r`` positions are
+       known and ``jump`` composes with itself, so ``n_syms`` positions
+       materialize in ``ceil(log2 n_syms)`` numpy gather rounds.
+
+    Decodes the exact byte streams the encoder writes (regression-gated
+    against the reference walk in ``tests/test_coding.py``).
+    """
     (n_alpha,) = struct.unpack_from("<I", data, 0)
     off = 4
     if n_alpha == 0:
@@ -107,7 +132,15 @@ def huffman_decode(data: bytes) -> np.ndarray:
     off += n_alpha
     n_syms, n_bits = struct.unpack_from("<QQ", data, off)
     off += 16
-    bits = np.unpackbits(np.frombuffer(data, dtype=np.uint8, offset=off), count=n_bits)
+    if n_syms == 0:
+        return np.zeros(0, dtype=np.int64)
+    if n_bits > 8 * (len(data) - off):
+        # the guard np.unpackbits(count=n_bits) used to provide: a truncated
+        # payload must fail loudly, not decode missing bits as zeros
+        raise ValueError(
+            f"truncated Huffman stream: header wants {n_bits} bits, "
+            f"payload has {8 * (len(data) - off)}"
+        )
 
     codes = _canonical_codes(lengths)
     max_len = int(lengths.max())
@@ -121,23 +154,72 @@ def huffman_decode(data: bytes) -> np.ndarray:
             span = 1 << (max_len - ln)
             table_sym[base : base + span] = sym
             table_len[base : base + span] = ln
-        # Pad the bitstream so the final window read never overruns.
-        padded = np.concatenate([bits, np.zeros(max_len, dtype=np.uint8)])
-        weights = (1 << np.arange(max_len - 1, -1, -1)).astype(np.int64)
+
+        # Decode in bit-range chunks so the per-position temporaries stay
+        # O(chunk) however large the stream is (the automaton arrays cost
+        # ~50 bytes per payload bit while live).
+        payload = np.frombuffer(data, dtype=np.uint8, offset=off)
+        buf = np.zeros(len(payload) + 8, dtype=np.uint8)
+        buf[: len(payload)] = payload
+        mask = np.uint32((1 << max_len) - 1)
         out = np.empty(n_syms, dtype=np.int64)
-        pos = 0
-        for i in range(n_syms):
-            window = int(padded[pos : pos + max_len] @ weights)
-            sym = table_sym[window]
-            out[i] = sym
-            pos += int(table_len[window])
+        filled = 0
+        abs_pos = 0
+        while filled < n_syms:
+            lo = abs_pos
+            dom = min(DECODE_CHUNK_BITS, n_bits - lo)
+            if dom <= 0:
+                raise ValueError("corrupt Huffman stream: ran out of bits")
+            # (1) window at every chunk position, from overlapping 32-bit
+            # big-endian reads (the zero pad covers the trailing overreads)
+            pos = np.arange(lo, lo + dom, dtype=np.int64)
+            byte0 = pos >> 3
+            word = (
+                (buf[byte0].astype(np.uint32) << np.uint32(24))
+                | (buf[byte0 + 1].astype(np.uint32) << np.uint32(16))
+                | (buf[byte0 + 2].astype(np.uint32) << np.uint32(8))
+                | buf[byte0 + 3].astype(np.uint32)
+            )
+            shift = (np.uint32(32 - max_len) - (pos & 7).astype(np.uint32)).astype(
+                np.uint32
+            )
+            window = ((word >> shift) & mask).astype(np.int64)
+            # (2) the chunk-relative decode automaton: jump[r] = r + code len
+            # at position lo + r.  Values are EXACT even past the chunk end
+            # (the window reads don't stop at dom), which is what hands the
+            # next chunk its exact start; composition below treats >= dom as
+            # absorbing so those values survive the doubling untouched.
+            sym_at = table_sym[window]
+            jump = pos + table_len[window] - lo
+            # (3) pointer-doubling expansion of the position chain: cap + 1
+            # entries so the first out-of-chunk position (the continuation)
+            # is materialized alongside the in-chunk symbol starts
+            cap = min(n_syms - filled, dom)
+            length = cap + 1
+            chain = np.empty(length, dtype=np.int64)
+            chain[0] = 0
+            m = 1
+            while m < length:
+                take = min(m, length - m)
+                src = chain[:take]
+                safe = np.minimum(src, dom - 1)
+                chain[m : m + take] = np.where(src >= dom, src, jump[safe])
+                m += take
+                if m < length:
+                    safe = np.minimum(jump, dom - 1)
+                    jump = np.where(jump >= dom, jump, jump[safe])
+            # positions are non-decreasing (code lengths >= 1, absorbing past
+            # dom), so the first out-of-chunk entry is a searchsorted away
+            k = min(int(np.searchsorted(chain, dom)), cap)
+            out[filled : filled + k] = sym_at[chain[:k]]
+            filled += k
+            if filled < n_syms:
+                abs_pos = lo + int(chain[k])
         return alphabet[out]
     # Fallback: per-bit canonical walk (rare: pathological length > 20).
-    # first_code/first_rank per length, symbols in canonical order.
-    order = np.lexsort((np.arange(n_alpha), lengths))
+    bits = np.unpackbits(np.frombuffer(data, dtype=np.uint8, offset=off), count=n_bits)
     out = np.empty(n_syms, dtype=np.int64)
     pos = 0
-    code_of = {int(codes[s]): None for s in range(n_alpha)}  # noqa: F841 (doc)
     lut = {(int(lengths[s]), int(codes[s])): s for s in range(n_alpha)}
     for i in range(n_syms):
         code = 0

@@ -65,44 +65,49 @@ def untile_1d(blocks: jnp.ndarray, shape, pad: int) -> jnp.ndarray:
     return flat.reshape(shape)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "max_iters"))
+@functools.partial(jax.jit, static_argnames=("block", "max_iters", "fft_impl"))
 def blockwise_correct(
     eps: jnp.ndarray,
     E,
     Delta,
     block: int = 4096,
     max_iters: int = 50,
+    fft_impl: str = "xla",
 ) -> jnp.ndarray:
     """Dual-domain-bound a spatial error tensor, blockwise.
 
     Returns the corrected error tensor (same shape as ``eps``) whose every
     ``block``-length pencil satisfies |eps_n| <= E and |Re/Im(FFT(eps))_k| <=
     Delta.  E/Delta are scalars or broadcastable against the (n_blocks, block)
-    tiling.
+    tiling.  ``fft_impl`` selects the loop transforms (see
+    :mod:`repro.core.pocs`; the packed/pallas paths are vmap-safe).
     """
     tiles, pad = tile_1d(eps, block)
 
     def correct_one(t):
-        res = alternating_projection(t, E, Delta, max_iters=max_iters)
+        res = alternating_projection(t, E, Delta, max_iters=max_iters, fft_impl=fft_impl)
         return res.eps
 
     corrected = jax.vmap(correct_one)(tiles)
     return untile_1d(corrected, eps.shape, pad)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "max_iters"))
+@functools.partial(jax.jit, static_argnames=("block", "max_iters", "fft_impl"))
 def blockwise_correct_with_edits(
     eps: jnp.ndarray,
     E,
     Delta,
     block: int = 4096,
     max_iters: int = 50,
+    fft_impl: str = "xla",
 ):
     """Like :func:`blockwise_correct` but also returns (spat_edits, freq_edits,
     iterations-per-block, converged-per-block) for serialization paths.
     ``freq_edits`` are per-block rfft half-spectra, shape (n_blocks, block//2+1)."""
     tiles, pad = tile_1d(eps, block)
-    res = jax.vmap(lambda t: alternating_projection(t, E, Delta, max_iters=max_iters))(tiles)
+    res = jax.vmap(
+        lambda t: alternating_projection(t, E, Delta, max_iters=max_iters, fft_impl=fft_impl)
+    )(tiles)
     corrected = untile_1d(res.eps, eps.shape, pad)
     return corrected, res.spat_edits, res.freq_edits, res.iterations, res.converged
 
@@ -118,14 +123,16 @@ class BatchCorrectionStats:
     block_converged: Any  # (total_blocks,) bool
 
 
-def _pocs_batched(packed, E_blk, D_blk, max_iters):
+def _pocs_batched(packed, E_blk, D_blk, max_iters, fft_impl="xla"):
     """Vmapped POCS over a packed (B, block) buffer (the batched backend)."""
     return jax.vmap(
-        lambda t, e, d: alternating_projection(t, e, d, max_iters=max_iters)
+        lambda t, e, d: alternating_projection(
+            t, e, d, max_iters=max_iters, fft_impl=fft_impl
+        )
     )(packed, E_blk, D_blk)
 
 
-def _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis):
+def _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis, fft_impl="xla"):
     """The batched POCS program under ``shard_map`` over ``mesh[axis]``.
 
     The leading (blocks) axis is sharded; each device runs the vmapped
@@ -143,7 +150,7 @@ def _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis):
         E_blk = jnp.concatenate([E_blk, jnp.ones((pad,), E_blk.dtype)])
         D_blk = jnp.concatenate([D_blk, jnp.ones((pad,), D_blk.dtype)])
     res = shard_map(
-        lambda t, e, d: _pocs_batched(t, e, d, max_iters),
+        lambda t, e, d: _pocs_batched(t, e, d, max_iters, fft_impl),
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis)),
         out_specs=P(axis),
@@ -155,7 +162,7 @@ def _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis):
 
 def _correct_batch_core(
     tensors, E_arr, Delta_arr, block, max_iters, return_edits, return_corrected,
-    backend="batched", mesh=None, axis="data",
+    backend="batched", mesh=None, axis="data", fft_impl="xla",
 ):
     """The whole batched correction — pack, vmapped POCS (optionally sharded
     over a mesh axis), unpack, per-instance stats — as ONE device program
@@ -173,9 +180,9 @@ def _correct_batch_core(
     D_blk = Delta_arr.astype(jnp.float32)[seg]
 
     if backend == "sharded":
-        res = _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis)
+        res = _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis, fft_impl)
     else:
-        res = _pocs_batched(packed, E_blk, D_blk, max_iters)
+        res = _pocs_batched(packed, E_blk, D_blk, max_iters, fft_impl)
 
     corrected, edits = [], []
     offset = 0
@@ -197,6 +204,7 @@ def _correct_batch_core(
 
 _BATCH_STATICS = (
     "block", "max_iters", "return_edits", "return_corrected", "backend", "mesh", "axis",
+    "fft_impl",
 )
 # donating makes each corrected output alias its input buffer; without
 # corrected outputs there is nothing to alias, so donation would only warn
@@ -229,6 +237,7 @@ def correct_batch(
     backend: str = "batched",
     mesh: Optional[Any] = None,
     axis: str = "data",
+    fft_impl: str = "xla",
 ):
     """Correct a heterogeneous batch of error tensors in one device program.
 
@@ -255,6 +264,9 @@ def correct_batch(
         identical results.
       mesh, axis: device mesh and axis name for the sharded backend
         (required when ``backend == "sharded"``).
+      fft_impl: POCS transform selector shared by every block (``"xla"`` |
+        ``"packed"`` | ``"pallas"``, see :mod:`repro.core.pocs`); identical
+        across backends, so backend parity is impl-independent.
 
     Returns ``(corrected, stats)`` — or ``(corrected, edits, stats)`` with
     ``return_edits`` — where ``corrected[i]`` has ``tensors[i]``'s shape and
@@ -288,6 +300,7 @@ def correct_batch(
         backend=backend,
         mesh=mesh,
         axis=axis,
+        fft_impl=fft_impl,
     )
     if return_edits:
         return list(corrected), list(edits), stats

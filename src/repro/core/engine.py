@@ -180,6 +180,11 @@ class FieldPlan:
     relax: float
     use_kernels: bool
     codec: str
+    # POCS loop transform selector ("xla" | "packed" | "pallas") and
+    # convergence-check cadence — see repro.core.pocs.  Defaults preserve the
+    # legacy trajectory (and blob bytes) exactly.
+    fft_impl: str = "xla"
+    check_every: int = 1
 
     @property
     def delta_scalar(self) -> float:
@@ -225,7 +230,15 @@ class FieldResult:
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_field_pocs_fn(mesh, spec, pointwise: bool, max_iters: int, relax: float):
+def _sharded_field_pocs_fn(
+    mesh,
+    spec,
+    pointwise: bool,
+    max_iters: int,
+    relax: float,
+    fft_impl: str = "xla",
+    check_every: int = 1,
+):
     """Compiled sharded whole-field POCS program, cached per (mesh, DistSpec).
 
     Scalar bounds enter as replicated operands so re-planning the same field
@@ -248,6 +261,8 @@ def _sharded_field_pocs_fn(mesh, spec, pointwise: bool, max_iters: int, relax: f
             relax=relax,
             check_slack=slack,
             dist=spec,
+            fft_impl=fft_impl,
+            check_every=check_every,
         )
 
     out_specs = AlternatingProjectionResult(
@@ -274,13 +289,28 @@ class CorrectionEngine:
         over all local devices, built lazily on first use so engine
         construction never touches jax device state.
       axis: mesh axis name the packed block buffer is sharded over.
+      fft_impl: default POCS transform selector for the *pencil* paths
+        (``"xla"`` | ``"packed"`` | ``"pallas"``, see
+        :mod:`repro.core.pocs`); whole-field corrections take theirs from
+        ``FFCzConfig.fft_impl`` via the plan.  All three backends thread it
+        into the loop — the packed/pallas transforms are vmap-safe, so the
+        batched and sharded programs lift them unchanged.
     """
 
-    def __init__(self, backend: str = "batched", mesh: Optional[Any] = None, axis: str = "data"):
+    def __init__(
+        self,
+        backend: str = "batched",
+        mesh: Optional[Any] = None,
+        axis: str = "data",
+        fft_impl: str = "xla",
+    ):
         if backend not in _BACKENDS:
             raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+        if fft_impl not in ("xla", "packed", "pallas"):
+            raise ValueError(f"fft_impl must be 'xla', 'packed' or 'pallas', got {fft_impl!r}")
         self.backend = backend
         self.axis = axis
+        self.fft_impl = fft_impl
         self._mesh = mesh
 
     # Engines compare by configuration, not identity, so jitted functions
@@ -289,7 +319,7 @@ class CorrectionEngine:
     # instance.  A lazily-built default mesh changes the key once on first
     # sharded use (one extra retrace), never corrupts a cache.
     def _key(self):
-        return (self.backend, self.axis, self._mesh)
+        return (self.backend, self.axis, self.fft_impl, self._mesh)
 
     def __eq__(self, other):
         return isinstance(other, CorrectionEngine) and self._key() == other._key()
@@ -395,6 +425,8 @@ class CorrectionEngine:
             relax=cfg.relax,
             use_kernels=cfg.use_kernels,
             codec=cfg.codec,
+            fft_impl=getattr(cfg, "fft_impl", "xla"),
+            check_every=getattr(cfg, "check_every", 1),
         )
 
     def plan_pencils(
@@ -474,6 +506,8 @@ class CorrectionEngine:
                 use_kernels=plan.use_kernels,
                 relax=plan.relax,
                 check_slack=0.5 * plan.slack_f,
+                fft_impl=plan.fft_impl,
+                check_every=plan.check_every,
             )
         # edit state -> host: this is the encode/serialization staging (the
         # single-device path stages identically); the float64 polish is a
@@ -504,6 +538,20 @@ class CorrectionEngine:
         """The whole-field POCS while_loop under ``shard_map`` (dist mode)."""
         if plan.use_kernels:
             raise ValueError("use_kernels is not supported for sharded whole fields")
+        if plan.fft_impl == "pallas":
+            raise ValueError(
+                "fft_impl='pallas' is not supported for sharded whole fields "
+                "(the fused epilogues assume the whole spectrum; use 'packed')"
+            )
+        if plan.fft_impl != "xla" and eps0.parity_requested == "bitwise":
+            # honest tri-state: the packed inverse places its roundings
+            # differently from the fused single-device irfftn, so blobs can
+            # only be bound-parity whatever the shape class
+            raise ValueError(
+                "parity='bitwise' requires fft_impl='xla': packed transforms "
+                "diverge from the single-device path at float32-rounding "
+                "level (bounds still hold; request parity='auto')"
+            )
         mesh = eps0.mesh
         if plan.pointwise:
             # pre-round the float64 plan grid to float32 on host (the same
@@ -518,7 +566,13 @@ class CorrectionEngine:
         else:
             delta_op = jnp.float32(plan.Delta_proj)
         fn = _sharded_field_pocs_fn(
-            mesh, eps0.dist_spec, plan.pointwise, plan.max_iters, plan.relax
+            mesh,
+            eps0.dist_spec,
+            plan.pointwise,
+            plan.max_iters,
+            plan.relax,
+            plan.fft_impl,
+            plan.check_every,
         )
         # scalar bounds ride as replicated operands (pre-rounded to the f32
         # values the single-device trace uses), so same-shape fields with
@@ -534,6 +588,7 @@ class CorrectionEngine:
         max_iters: int = 50,
         return_edits: bool = False,
         return_corrected: bool = True,
+        fft_impl: Optional[str] = None,
     ):
         """Pencil-tiled correction of a heterogeneous batch on this backend.
 
@@ -541,9 +596,13 @@ class CorrectionEngine:
         implements the ``batched`` and ``sharded`` backends); the ``local``
         backend dispatches one program per tensor.  Jit-safe on the batched
         backend, so jitted integrations can call through unchanged.
+        ``fft_impl`` overrides the engine default for this call.
         """
+        fft_impl = self.fft_impl if fft_impl is None else fft_impl
         if self.backend == "local":
-            return self._correct_local(tensors, E, Delta, block, max_iters, return_edits, return_corrected)
+            return self._correct_local(
+                tensors, E, Delta, block, max_iters, return_edits, return_corrected, fft_impl
+            )
         return blockwise.correct_batch(
             tensors,
             E,
@@ -555,9 +614,12 @@ class CorrectionEngine:
             backend=self.backend,
             mesh=self.mesh if self.backend == "sharded" else None,
             axis=self.axis,
+            fft_impl=fft_impl,
         )
 
-    def _correct_local(self, tensors, E, Delta, block, max_iters, return_edits, return_corrected):
+    def _correct_local(
+        self, tensors, E, Delta, block, max_iters, return_edits, return_corrected, fft_impl="xla"
+    ):
         """Per-tensor dispatch (the pre-batching behaviour, kept for
         comparison benches and single-tensor calls).  Bounds go through the
         same resolver as the batched/sharded backends so the scalar-vs-
@@ -569,7 +631,7 @@ class CorrectionEngine:
         for t, e, d in zip(tensors, Es, Ds):
             t = jnp.asarray(t)
             corr, spat, freq, iters, conv = blockwise.blockwise_correct_with_edits(
-                t, e, d, block=block, max_iters=max_iters
+                t, e, d, block=block, max_iters=max_iters, fft_impl=fft_impl
             )
             if return_corrected:
                 corrected.append(corr.astype(t.dtype))

@@ -95,6 +95,18 @@ class FFCzConfig:
     # alternating projection; ~1.3 converges orders of magnitude faster in
     # the nearly-tangential regime — see EXPERIMENTS.md §Perf FFCz-iter).
     relax: float = 1.0
+    # POCS loop transform selector: "xla" (default; blobs byte-identical to
+    # earlier writers), "packed" (pack-trick C2R inverse — the measured CPU
+    # fast path), or "pallas" (packed + fused clip/count epilogue kernels).
+    # See repro.core.pocs / repro.kernels.rfft.  Non-"xla" impls are
+    # "bound"-parity: sharded blobs may diverge from single-device ones at
+    # float32-rounding level while the dual-bound guarantee holds.
+    fft_impl: str = "xla"
+    # Run the POCS convergence-check reduction every K-th iteration (the
+    # final iteration always checks).  Extra iterations are always safe, so
+    # K > 1 trades up-to-K-1 late convergence for one reduction (and one
+    # psum, in distributed mode) per skipped iteration.
+    check_every: int = 1
 
     def __post_init__(self):
         if (self.E_abs is None) == (self.E_rel is None):
@@ -102,6 +114,12 @@ class FFCzConfig:
         n_freq = sum(x is not None for x in (self.Delta_abs, self.Delta_rel, self.pspec_rel))
         if n_freq != 1:
             raise ValueError("exactly one of Delta_abs / Delta_rel / pspec_rel required")
+        if self.fft_impl not in ("xla", "packed", "pallas"):
+            raise ValueError(
+                f"fft_impl must be 'xla', 'packed' or 'pallas', got {self.fft_impl!r}"
+            )
+        if self.check_every < 1:
+            raise ValueError(f"check_every must be >= 1, got {self.check_every}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -53,7 +53,9 @@ def _fcube_kernel(
     # absolute slack for near-floor pointwise Delta_k
     dt = d * (1.0 + check_tol) + slk_ref[...]
     viol = ((jnp.abs(re) > dt) | (jnp.abs(im) > dt)).astype(jnp.int32) * w
-    viol_ref[0] = jnp.sum(viol)
+    # dtype pinned: under jax_enable_x64 a bare sum promotes to int64 and
+    # the store into the int32 out ref fails at trace time
+    viol_ref[0] = jnp.sum(viol, dtype=jnp.int32)
 
 
 @functools.partial(

@@ -18,26 +18,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.fcube.kernel import BLOCK_ROWS, LANES, fcube_pallas
-
-
-def _is_cpu() -> bool:
-    return jax.default_backend() == "cpu"
-
-
-def _tile(x: jnp.ndarray, block_rows: int):
-    """Flatten to (rows, 128) with rows % block_rows == 0; returns (tiled, pad)."""
-    flat = x.reshape(-1)
-    chunk = block_rows * LANES
-    pad = (-flat.size) % chunk
-    flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, LANES), pad
-
-
-def _untile(t: jnp.ndarray, shape, pad: int):
-    flat = t.reshape(-1)
-    if pad:
-        flat = flat[:-pad]
-    return flat.reshape(shape)
+from repro.kernels.tiling import is_cpu as _is_cpu
+from repro.kernels.tiling import tile as _tile
+from repro.kernels.tiling import tile_bound as _tile_bound
+from repro.kernels.tiling import untile as _untile
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret", "check_tol"))
@@ -69,10 +53,7 @@ def project_fcube_fused(
     pointwise = Delta_arr.ndim > 0
     if pointwise:
         # pad pointwise bounds with +inf so padded zero lanes are never violations
-        dt, _ = _tile(jnp.broadcast_to(Delta_arr, shape), block_rows)
-        if pad:
-            flat = dt.reshape(-1).at[-pad:].set(jnp.inf) if pad else dt.reshape(-1)
-            dt = flat.reshape(-1, LANES)
+        dt = _tile_bound(Delta_arr, shape, block_rows, pad)
     else:
         dt = Delta_arr.reshape(1, 1)
     weighted = weight is not None
@@ -89,4 +70,5 @@ def project_fcube_fused(
     )
     clipped = (_untile(cr, shape, pad) + 1j * _untile(ci, shape, pad)).astype(delta.dtype)
     edits = (_untile(er, shape, pad) + 1j * _untile(ei, shape, pad)).astype(delta.dtype)
-    return clipped, edits, jnp.sum(viol)
+    # dtype pinned so the loop carry stays int32 under jax_enable_x64
+    return clipped, edits, jnp.sum(viol, dtype=jnp.int32)

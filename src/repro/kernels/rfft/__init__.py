@@ -1,0 +1,23 @@
+"""Fused rFFT kernel suite: pack-trick C2R/R2C + projection epilogues."""
+
+from repro.kernels.rfft.ops import (
+    fwd_epilogue_fused,
+    mirror_half_spectrum,
+    packed_irfft,
+    packed_irfftn,
+    packed_rfftn,
+    supports_packed,
+    twiddle_plan,
+    unpack_sclip_fused,
+)
+
+__all__ = [
+    "fwd_epilogue_fused",
+    "mirror_half_spectrum",
+    "packed_irfft",
+    "packed_irfftn",
+    "packed_rfftn",
+    "supports_packed",
+    "twiddle_plan",
+    "unpack_sclip_fused",
+]

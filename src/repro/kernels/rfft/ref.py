@@ -1,0 +1,83 @@
+"""Pure-numpy oracles for the fused rFFT kernel suite (test references)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def mirror_half_spectrum_ref(a: np.ndarray) -> np.ndarray:
+    """Numpy twin of :func:`repro.kernels.rfft.ops.mirror_half_spectrum`."""
+    for ax in range(a.ndim - 1):
+        a = np.roll(np.flip(a, axis=ax), 1, axis=ax)
+    return a[..., ::-1]
+
+
+def packed_rfftn_ref(x: np.ndarray) -> np.ndarray:
+    """Pack-trick R2C in float64 numpy (independent of the jnp path)."""
+    n = x.shape[-1]
+    k = np.arange(n // 2 + 1)
+    w_fwd = np.exp((-2j * np.pi / n) * k)
+    z = x[..., 0::2] + 1j * x[..., 1::2]
+    Z = np.fft.fftn(z)
+    Zf = np.concatenate([Z, Z[..., :1]], axis=-1)
+    Zm = np.conj(mirror_half_spectrum_ref(Zf))
+    return 0.5 * (Zf + Zm) + w_fwd * (-0.5j) * (Zf - Zm)
+
+
+def packed_irfftn_ref(X: np.ndarray, shape: Tuple[int, ...]) -> np.ndarray:
+    """Pack-trick C2R in float64 numpy (independent of the jnp path)."""
+    n = shape[-1]
+    k = np.arange(n // 2 + 1)
+    w_inv = np.exp((+2j * np.pi / n) * k)
+    Xm = np.conj(mirror_half_spectrum_ref(X))
+    E = 0.5 * (X + Xm)
+    O = 0.5 * w_inv * (X - Xm)
+    z = np.fft.ifftn((E + 1j * O)[..., : n // 2])
+    out = np.empty(shape, dtype=z.real.dtype)
+    out[..., 0::2] = z.real
+    out[..., 1::2] = z.imag
+    return out
+
+
+def fwd_epilogue_ref(
+    delta: np.ndarray,
+    Delta,
+    weight=None,
+    check_tol: float = 0.0,
+    check_slack: float = 0.0,
+):
+    """Reference of :func:`repro.kernels.rfft.ops.fwd_epilogue_fused`.
+
+    Built from the projection oracles' definitions: clip, displacement,
+    pair-weighted count, then the inverse pack twiddle applied to the
+    *clipped* spectrum (the kernel clips a mirrored operand instead, which
+    is the same map because clip commutes with the Hermitian mirror).
+    """
+    n = 2 * (delta.shape[-1] - 1)
+    k = np.arange(n // 2 + 1)
+    w_inv = np.exp((+2j * np.pi / n) * k)
+    D = np.broadcast_to(np.asarray(Delta, dtype=np.float32), delta.shape)
+    clipped = np.clip(delta.real, -D, D) + 1j * np.clip(delta.imag, -D, D)
+    clipped = clipped.astype(delta.dtype)
+    disp = clipped - delta
+    dt = D * (1.0 + check_tol) + check_slack
+    vb = (np.abs(delta.real) > dt) | (np.abs(delta.imag) > dt)
+    w = np.ones_like(vb, dtype=np.int64) if weight is None else np.broadcast_to(weight, vb.shape)
+    viol = int((vb * w).sum())
+    Xm = np.conj(mirror_half_spectrum_ref(clipped))
+    E = 0.5 * (clipped + Xm)
+    O = 0.5 * w_inv.astype(np.complex64) * (clipped - Xm)
+    Z = (E + 1j * O).astype(delta.dtype)
+    return clipped, disp, Z, viol
+
+
+def unpack_sclip_ref(z: np.ndarray, E, shape: Tuple[int, ...]):
+    """Reference of :func:`repro.kernels.rfft.ops.unpack_sclip_fused`."""
+    x = np.empty(shape, dtype=z.real.dtype)
+    x[..., 0::2] = z.real
+    x[..., 1::2] = z.imag
+    Eb = np.broadcast_to(np.asarray(E, dtype=x.dtype), shape)
+    clipped = np.clip(x, -Eb, Eb)
+    return clipped, clipped - x

@@ -7,11 +7,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.scube.kernel import BLOCK_ROWS, LANES, scube_pallas
-
-
-def _is_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+from repro.kernels.scube.kernel import BLOCK_ROWS, scube_pallas
+from repro.kernels.tiling import is_cpu as _is_cpu
+from repro.kernels.tiling import tile as _tile
+from repro.kernels.tiling import tile_bound as _tile_bound
+from repro.kernels.tiling import untile as _untile
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -25,24 +25,12 @@ def project_scube_fused(
     if interpret is None:
         interpret = _is_cpu()
     shape, dtype = eps.shape, eps.dtype
-    flat = eps.astype(jnp.float32).reshape(-1)
-    chunk = block_rows * LANES
-    pad = (-flat.size) % chunk
-    flat = jnp.pad(flat, (0, pad))
-    tiled = flat.reshape(-1, LANES)
+    tiled, pad = _tile(eps.astype(jnp.float32), block_rows)
     E_arr = jnp.asarray(E, dtype=jnp.float32)
     pointwise = E_arr.ndim > 0
     if pointwise:
-        e_flat = jnp.pad(jnp.broadcast_to(E_arr, shape).astype(jnp.float32).reshape(-1), (0, pad), constant_values=jnp.inf)
-        e_in = e_flat.reshape(-1, LANES)
+        e_in = _tile_bound(E_arr, shape, block_rows, pad)
     else:
         e_in = E_arr.reshape(1, 1)
     c, ed = scube_pallas(tiled, e_in, pointwise=pointwise, interpret=interpret, block_rows=block_rows)
-
-    def untile(t):
-        f = t.reshape(-1)
-        if pad:
-            f = f[:-pad]
-        return f.reshape(shape).astype(dtype)
-
-    return untile(c), untile(ed)
+    return _untile(c, shape, pad).astype(dtype), _untile(ed, shape, pad).astype(dtype)

@@ -328,8 +328,32 @@ def rfftn_local(block: jnp.ndarray, spec: DistSpec) -> jnp.ndarray:
     )
 
 
-def irfftn_local(block: jnp.ndarray, spec: DistSpec) -> jnp.ndarray:
-    """Distributed ``irfftn`` body (inverse pass order: axis 0, axis 1, c2r last)."""
+def _c2r_last(p: jnp.ndarray, n: int, fft_impl: str) -> jnp.ndarray:
+    """The local last-axis C2R pass, with the pack-trick fast path.
+
+    ``fft_impl="packed"`` swaps XLA's C2R custom call (the measured slow
+    half of the loop) for :func:`repro.kernels.rfft.ops.packed_irfft` — a
+    per-line transform, so it composes with the pencil decomposition
+    unchanged (every line it sees is a full half-spectrum of a real line).
+    Odd last axes fall back to XLA.  The packed pass rounds differently
+    from the fused single-device inverse, so distributed parity under it is
+    ``"bound"``, never ``"bitwise"``.
+    """
+    if fft_impl == "packed" and n % 2 == 0 and n >= 2:
+        from repro.kernels.rfft import ops as rfft_ops
+
+        return rfft_ops.packed_irfft(p, n)
+    return jnp.fft.irfft(p, n=n, axis=p.ndim - 1)
+
+
+def irfftn_local(
+    block: jnp.ndarray, spec: DistSpec, fft_impl: str = "xla"
+) -> jnp.ndarray:
+    """Distributed ``irfftn`` body (inverse pass order: axis 0, axis 1, c2r last).
+
+    ``fft_impl="packed"`` runs the final local c2r pass through the
+    pack-trick transform (see :func:`_c2r_last`).
+    """
     gshape = spec.gshape
     nd = len(gshape)
     if nd == 2:
@@ -340,7 +364,7 @@ def irfftn_local(block: jnp.ndarray, spec: DistSpec) -> jnp.ndarray:
             split_axis=0,
             concat_axis=1,
             keep=gshape[-1] // 2 + 1,
-            apply_fn=lambda p: jnp.fft.irfft(p, n=gshape[1], axis=1),
+            apply_fn=lambda p: _c2r_last(p, gshape[1], fft_impl),
         )
     t = _transpose_apply(
         block,
@@ -358,7 +382,7 @@ def irfftn_local(block: jnp.ndarray, spec: DistSpec) -> jnp.ndarray:
         keep=gshape[1],
         apply_fn=lambda p: jnp.fft.ifft(p, axis=1),
     )
-    return jnp.fft.irfft(t, n=gshape[2], axis=2)
+    return _c2r_last(t, gshape[2], fft_impl)
 
 
 def _as_parity_request(parity, strict_bitwise) -> str:

@@ -16,7 +16,14 @@ and bound kinds (``Delta_abs`` / ``Delta_rel`` / ``pspec``), across the
   single-device blob payload byte for byte from a sharded field,
   ``"bound"``-class shapes hold the bounds without byte parity, and
   requesting ``parity="bitwise"`` on a ``"bound"`` shape is the error state;
-* pencil-batch corrections are bitwise identical across engine backends.
+* pencil-batch corrections are bitwise identical across engine backends;
+* the ``fft_impl`` dimension (ISSUE 5): the packed / pallas-interpret loop
+  transforms must conform on the same randomized odd/prime/dtype/bound
+  matrix — including the float64 recheck against STORED bounds — and their
+  parity classification is honest: non-``"xla"`` impls are ``"bound"``-class
+  (requesting ``parity="bitwise"`` with them is the error state), while
+  pencil corrections remain bitwise identical ACROSS backends for every
+  impl (the three backends run the same per-block program).
 
 Sharded cases run in-process and are exercised by the multi-device CI leg
 (``XLA_FLAGS=--xla_force_host_platform_device_count=8`` is set for the whole
@@ -55,6 +62,9 @@ FIELD_SHAPES = [
     (32, 48),  # 2-D pow2 axis 0, uneven half axis (H=25)
 ]
 BOUND_KINDS = ["Delta_abs", "Delta_rel", "pspec"]
+FFT_IMPLS = ["packed", "pallas"]
+# even-last-axis (pack-trick) + odd-last-axis (static fallback) + 2-D
+IMPL_SHAPES = [(30, 14, 10), (13, 11, 7), (32, 48)]
 
 
 def _field(shape, seed=0, dtype=np.float32):
@@ -63,13 +73,13 @@ def _field(shape, seed=0, dtype=np.float32):
     return np.ascontiguousarray(f, dtype=dtype)
 
 
-def _cfg(kind, x) -> FFCzConfig:
+def _cfg(kind, x, **kw) -> FFCzConfig:
     if kind == "Delta_abs":
         d = float(np.abs(np.fft.rfftn(np.asarray(x, np.float32))).max() * 1e-3)
-        return FFCzConfig(E_rel=1e-3, Delta_rel=None, Delta_abs=d)
+        return FFCzConfig(E_rel=1e-3, Delta_rel=None, Delta_abs=d, **kw)
     if kind == "Delta_rel":
-        return FFCzConfig(E_rel=1e-3, Delta_rel=1e-3)
-    return FFCzConfig(E_rel=1e-3, Delta_rel=None, pspec_rel=1e-3, max_iters=1500)
+        return FFCzConfig(E_rel=1e-3, Delta_rel=1e-3, **kw)
+    return FFCzConfig(E_rel=1e-3, Delta_rel=None, pspec_rel=1e-3, max_iters=1500, **kw)
 
 
 def _assert_round_trip_conforms(x, blob, dec):
@@ -190,6 +200,76 @@ class TestPencilBackendConformance:
             assert np.abs(spec.imag).max() <= d + tol
 
 
+class TestFftImplConformance:
+    """ISSUE 5: the packed / pallas transforms gate on the same matrix."""
+
+    @pytest.mark.parametrize("kind", BOUND_KINDS)
+    @pytest.mark.parametrize("impl", FFT_IMPLS)
+    @pytest.mark.parametrize("shape", IMPL_SHAPES, ids=str)
+    def test_single_device_round_trip(self, shape, impl, kind):
+        x = _field(shape, seed=sum(shape))
+        c = FFCz(get_compressor("szlike"), _cfg(kind, x, fft_impl=impl))
+        blob = c.compress(x)
+        _assert_round_trip_conforms(x, blob, c.decompress(blob))
+
+    @pytest.mark.parametrize("kind", ["Delta_rel", "pspec"])
+    @pytest.mark.parametrize("shape", IMPL_SHAPES, ids=str)
+    def test_sharded_packed_round_trip(self, shape, kind):
+        """fft_impl='packed' composes with the distributed local last-axis
+        pass; bounds hold on every shape class (no byte-parity claim — the
+        packed inverse is 'bound'-parity by construction)."""
+        x = _field(shape, seed=sum(shape))
+        c = FFCz(get_compressor("szlike"), _cfg(kind, x, fft_impl="packed"))
+        blob = c.compress(ShardedField.shard(x))
+        _assert_round_trip_conforms(x, blob, c.decompress(blob))
+
+    def test_parity_classification_is_honest(self):
+        """Non-'xla' impls are 'bound'-parity whatever the shape class:
+        requesting parity='bitwise' with them is the error state, even on a
+        shape whose xla classification would be 'bitwise'."""
+        x = _field((32, 16, 12))  # all c2c axes pow2: xla would be bitwise
+        field = ShardedField.shard(x, parity="bitwise")
+        assert field.parity == "bitwise"
+        c = FFCz(get_compressor("szlike"), _cfg("Delta_rel", x, fft_impl="packed"))
+        with pytest.raises(ValueError, match="bitwise"):
+            c.compress(field)
+        # auto parity accepts and conforms
+        blob = c.compress(ShardedField.shard(x))
+        _assert_round_trip_conforms(x, blob, c.decompress(blob))
+        # pallas is rejected for sharded whole fields outright
+        c2 = FFCz(get_compressor("szlike"), _cfg("Delta_rel", x, fft_impl="pallas"))
+        with pytest.raises(ValueError, match="pallas"):
+            c2.compress(ShardedField.shard(x))
+
+    @pytest.mark.parametrize("impl", FFT_IMPLS)
+    def test_pencil_backends_bitwise_per_impl(self, impl):
+        """local/batched/sharded run the identical per-block program for
+        every fft_impl, so cross-backend parity stays bitwise."""
+        rng = np.random.default_rng(3)
+        tensors = [
+            rng.standard_normal(640).astype(np.float32) * 0.02,
+            rng.standard_normal((8, 32)).astype(np.float32) * 0.02,
+        ]
+        outs = {}
+        for backend in ("local", "batched", "sharded"):
+            c, s = CorrectionEngine(backend, fft_impl=impl).correct(
+                [t.copy() for t in tensors], 0.03, 0.05, block=128, max_iters=80
+            )
+            outs[backend] = [np.asarray(t) for t in c]
+            assert np.asarray(s.converged).all()
+        for backend in ("local", "sharded"):
+            for a, b in zip(outs["batched"], outs[backend]):
+                assert np.array_equal(a, b), (impl, backend)
+
+    def test_check_every_cadence_conforms(self):
+        """check_every > 1 only delays the convergence declaration; the
+        round-trip contract is unchanged (extra iterations are safe)."""
+        x = _field((30, 14, 10), seed=7)
+        c = FFCz(get_compressor("szlike"), _cfg("pspec", x, check_every=4))
+        blob = c.compress(x)
+        _assert_round_trip_conforms(x, blob, c.decompress(blob))
+
+
 # ---------------------------------------------------------------------------
 # randomized property layer (hypothesis; skips without it)
 
@@ -206,9 +286,10 @@ class TestRandomizedConformance:
         shape = _draw_shape(data)
         kind = data.draw(st.sampled_from(BOUND_KINDS))
         dtype = data.draw(st.sampled_from([np.float32, np.float64]))
+        impl = data.draw(st.sampled_from(["xla", "packed", "pallas"]))
         seed = data.draw(st.integers(0, 2**16))
         x = _field(shape, seed=seed, dtype=dtype)
-        c = FFCz(get_compressor("szlike"), _cfg(kind, x))
+        c = FFCz(get_compressor("szlike"), _cfg(kind, x, fft_impl=impl))
         blob = c.compress(x)
         _assert_round_trip_conforms(x, blob, c.decompress(blob))
 

@@ -253,3 +253,112 @@ class TestLegacyBlobBackwardCompat:
         assert np.abs(out.astype(np.float64) - modern.astype(np.float64)).max() <= E
         # and the legacy reconstruction still honors the spatial bound
         assert np.abs(out.astype(np.float64) - x.astype(np.float64)).max() <= E * (1 + 1e-6)
+
+
+class TestFftImplSelector:
+    """fft_impl='packed'/'pallas' loop parity vs the XLA transforms."""
+
+    @pytest.mark.parametrize("impl", ["packed", "pallas"])
+    @pytest.mark.parametrize("shape", [(128,), (32, 32), (12, 10, 16)])
+    def test_matches_xla_loop(self, impl, shape, rng):
+        E = 0.1
+        eps0 = np.clip(rng.standard_normal(shape) * 0.05, -E, E).astype(np.float32)
+        Delta = 0.4 * np.abs(np.fft.fftn(eps0)).max()
+        r_x = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=500)
+        r_i = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=500, fft_impl=impl)
+        # packed transforms round differently at float32 level, so the
+        # trajectory may differ by rounding; the fixed point must agree
+        assert bool(r_i.converged)
+        assert abs(int(r_i.iterations) - int(r_x.iterations)) <= 1
+        assert _mismatch(r_x.eps, r_i.eps) < 1e-5
+        assert np.abs(np.asarray(r_i.eps)).max() <= E
+
+    @pytest.mark.parametrize("impl", ["packed", "pallas"])
+    def test_pointwise_delta(self, impl, rng):
+        shape = (24, 18)
+        E = 0.1
+        eps0 = np.clip(rng.standard_normal(shape) * 0.05, -E, E).astype(np.float32)
+        d0 = np.abs(np.fft.rfftn(eps0))
+        Delta = np.maximum(0.5 * d0, 0.1 * d0.max()).astype(np.float32)
+        r_x = alternating_projection(jnp.asarray(eps0), E, jnp.asarray(Delta), max_iters=1000)
+        r_i = alternating_projection(
+            jnp.asarray(eps0), E, jnp.asarray(Delta), max_iters=1000, fft_impl=impl
+        )
+        assert bool(r_i.converged)
+        assert _mismatch(r_x.eps, r_i.eps) < 1e-5
+
+    @pytest.mark.parametrize("impl", ["packed", "pallas"])
+    def test_odd_last_axis_falls_back(self, impl, rng):
+        """Odd shapes statically fall back; 'packed' becomes the exact XLA
+        path, 'pallas' the XLA transforms + fused projection kernels."""
+        shape = (31, 17)
+        E = 0.1
+        eps0 = np.clip(rng.standard_normal(shape) * 0.05, -E, E).astype(np.float32)
+        Delta = 0.4 * np.abs(np.fft.fftn(eps0)).max()
+        r_x = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=500)
+        r_i = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=500, fft_impl=impl)
+        assert int(r_i.iterations) == int(r_x.iterations)
+        assert _mismatch(r_x.eps, r_i.eps) == 0.0
+
+    def test_invalid_combinations_raise(self, rng):
+        eps0 = jnp.zeros((16,), jnp.float32)
+        with pytest.raises(ValueError, match="fft_impl"):
+            alternating_projection(eps0, 0.1, 0.1, fft_impl="duff")
+        with pytest.raises(ValueError, match="rfft"):
+            alternating_projection(eps0, 0.1, 0.1, fft_impl="packed", use_rfft=False)
+        with pytest.raises(ValueError, match="use_kernels"):
+            alternating_projection(eps0, 0.1, 0.1, fft_impl="pallas", use_kernels=True)
+        with pytest.raises(ValueError, match="relax"):
+            alternating_projection(eps0, 0.1, 0.1, fft_impl="pallas", relax=1.3)
+        with pytest.raises(ValueError, match="check_every"):
+            alternating_projection(eps0, 0.1, 0.1, check_every=0)
+
+    @pytest.mark.parametrize("impl", ["packed", "pallas"])
+    def test_blockwise_backends_take_fft_impl(self, impl, rng):
+        """The vmapped pencil program lifts the packed transforms unchanged."""
+        eps = (rng.standard_normal(512) * 0.02).astype(np.float32)
+        base = np.asarray(blockwise_correct(jnp.asarray(eps), 0.03, 0.05, block=128, max_iters=60))
+        got = np.asarray(
+            blockwise_correct(jnp.asarray(eps), 0.03, 0.05, block=128, max_iters=60, fft_impl=impl)
+        )
+        assert np.abs(got).max() <= 0.03
+        assert np.abs(got - base).max() < 1e-6
+
+
+class TestCheckEveryCadence:
+    def test_cadenced_loop_converges_and_holds_bounds(self, rng):
+        shape = (32, 32)
+        E = 0.05
+        eps0 = np.clip(rng.standard_normal(shape) * 0.03, -E, E).astype(np.float32)
+        Delta = 0.3 * np.abs(np.fft.fftn(eps0)).max()
+        r1 = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=500)
+        for k in (2, 5):
+            rk = alternating_projection(jnp.asarray(eps0), E, Delta, max_iters=500, check_every=k)
+            assert bool(rk.converged)
+            # convergence is declared at the first check at-or-after the true
+            # iteration (extra iterations are safe no-ops)
+            assert int(r1.iterations) <= int(rk.iterations) < int(r1.iterations) + k
+            assert int(rk.final_violations) == 0
+            assert np.abs(np.asarray(rk.eps)).max() <= E
+            d = np.fft.rfftn(np.asarray(rk.eps, dtype=np.float64))
+            tol = Delta * 2e-5
+            assert max(np.abs(d.real).max(), np.abs(d.imag).max()) <= Delta + tol
+
+    def test_final_iteration_always_checks(self, rng):
+        """A max_iters exit reports a real violation count, never a stale one.
+
+        Adversarial never-feasible configuration (the bench's forced-iteration
+        workload): every point sits on an s-cube face with an imbalanced sign
+        pattern and the f-cube pins the DC component, so the s-projection
+        restores the DC violation every iteration.
+        """
+        E = 0.05
+        sgn = np.where(rng.random(64) < 0.7, 1.0, -1.0)
+        eps0 = (E * sgn).astype(np.float32)
+        Delta = (1e9 * np.ones(33)).astype(np.float32)
+        Delta[0] = 1e-4 * abs(float(eps0.sum()))
+        r = alternating_projection(
+            jnp.asarray(eps0), E, jnp.asarray(Delta), max_iters=5, check_every=4
+        )
+        assert not bool(r.converged)
+        assert int(r.final_violations) > 0
