@@ -45,6 +45,31 @@ def main() -> int:
         "hypothesis CI profile (tests/conftest.py) keeps randomized tests "
         "reproducible across workers",
     )
+    ap.add_argument(
+        "--select",
+        nargs="+",
+        default=None,
+        metavar="PATH",
+        help="run only these test paths (e.g. tests/test_faults.py for the "
+        "chaos-smoke leg) instead of the whole suite",
+    )
+    ap.add_argument(
+        "--wall-timeout",
+        type=float,
+        default=None,
+        metavar="SECONDS",
+        help="kill the pytest subprocess after this many seconds and report "
+        "FAILURE — a hung chaos test must fail the build, not stall the "
+        "runner until the job-level timeout reaps it",
+    )
+    ap.add_argument(
+        "--per-test-timeout",
+        type=float,
+        default=None,
+        metavar="SECONDS",
+        help="pass --timeout=N to pytest when pytest-timeout is installed "
+        "(silently skipped otherwise, so the gate runs in minimal envs)",
+    )
     args = ap.parse_args()
 
     with open(args.known) as f:
@@ -53,14 +78,32 @@ def main() -> int:
     cmd = [sys.executable, "-m", "pytest", "-q", "--tb=no", "-rEf"]
     if args.xdist:
         cmd += ["-n", "auto"]
+    if args.per_test_timeout is not None:
+        import importlib.util
+
+        if importlib.util.find_spec("pytest_timeout") is not None:
+            cmd.append(f"--timeout={args.per_test_timeout}")
+        else:
+            print("pytest-timeout not installed; per-test timeout not enforced")
     if args.junit:
         cmd.append(f"--junitxml={args.junit}")
-    proc = subprocess.run(
-        cmd,
-        cwd=os.path.dirname(HERE),
-        capture_output=True,
-        text=True,
-    )
+    if args.select:
+        cmd += args.select
+    try:
+        proc = subprocess.run(
+            cmd,
+            cwd=os.path.dirname(HERE),
+            capture_output=True,
+            text=True,
+            timeout=args.wall_timeout,
+        )
+    except subprocess.TimeoutExpired as e:
+        partial = e.stdout or ""
+        if isinstance(partial, bytes):
+            partial = partial.decode(errors="replace")
+        print(partial[-2000:])
+        print(f"\nHANG: pytest exceeded the {args.wall_timeout:g}s wall timeout — failing")
+        return 1
     out = proc.stdout + proc.stderr
     print(out[-4000:])
 

@@ -26,6 +26,7 @@ import numpy as np
 from repro.coding.bitpack import pack_bits, unpack_bits
 from repro.coding.lossless import lossless_compress, lossless_decompress
 from repro.coding.quantize import DEFAULT_QUANT_BITS, dequantize_uniform, quantize_uniform
+from repro.core.errors import BlobCorruptError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,10 +72,19 @@ class EncodedEdits:
 
     @staticmethod
     def from_bytes(data: bytes) -> "EncodedEdits":
-        ndim, packed, n_active, n_flags, n_payload = struct.unpack_from("<BBIQQ", data, 0)
-        off = struct.calcsize("<BBIQQ")
-        shape = struct.unpack_from(f"<{ndim}Q", data, off)
+        try:
+            ndim, packed, n_active, n_flags, n_payload = struct.unpack_from("<BBIQQ", data, 0)
+            off = struct.calcsize("<BBIQQ")
+            if ndim > 16:
+                raise BlobCorruptError(f"corrupt edit stream: implausible rank {ndim}")
+            shape = struct.unpack_from(f"<{ndim}Q", data, off)
+        except struct.error as e:
+            raise BlobCorruptError(f"truncated edit stream header: {e}", cause=e) from e
         off += 8 * ndim
+        if len(data) < off + n_flags + n_payload:
+            raise BlobCorruptError(
+                f"truncated edit stream: {len(data)} bytes, sections want {off + n_flags + n_payload}"
+            )
         flags = data[off : off + n_flags]
         payload = data[off + n_flags : off + n_flags + n_payload]
         return EncodedEdits(
@@ -143,9 +153,25 @@ def decode_edits(enc: EncodedEdits, bound) -> np.ndarray:
     import zlib
 
     n = int(np.prod(enc.shape)) if enc.shape else 1
-    flags = unpack_bits(zlib.decompress(enc.flags), n)
-    active = np.flatnonzero(flags)
-    codes = lossless_decompress(enc.payload)
+    try:
+        flags = unpack_bits(zlib.decompress(enc.flags), n)
+        active = np.flatnonzero(flags)
+        codes = lossless_decompress(enc.payload)
+    except BlobCorruptError:
+        raise
+    except Exception as e:
+        # zlib.error / bad-magic ValueError / huffman garbage: the streams
+        # are untrusted bytes, so every failure mode maps to one structured
+        # corruption error instead of leaking codec internals
+        raise BlobCorruptError(f"corrupt edit stream: {type(e).__name__}: {e}", cause=e) from e
+    # Corruption that survives the entropy coder surfaces as a code count
+    # that disagrees with the flag bitmap — catch it here with a structured
+    # error instead of a downstream shape/broadcast crash.
+    expected = 2 * active.size if enc.is_complex else active.size
+    if codes.size != expected:
+        raise BlobCorruptError(
+            f"corrupt edit stream: {codes.size} codes for {active.size} active flags"
+        )
     bound = np.asarray(bound, dtype=np.float64)
     b_active = bound.ravel()[active] if bound.ndim else bound
     if enc.is_complex:

@@ -48,6 +48,7 @@ from jax.sharding import PartitionSpec as P
 from repro.coding.quantize import DEFAULT_QUANT_BITS
 from repro.core import blockwise
 from repro.core.bounds import power_spectrum_delta_rfft, resolve_bounds
+from repro.core.errors import FFCzError, InfeasibleBound, classify_exception
 from repro.core.cubes import rfft_pair_weights
 from repro.core.edits import EncodedEdits, encode_edits
 from repro.core.pocs import (
@@ -216,13 +217,24 @@ class PencilPlan:
 
 @dataclasses.dataclass
 class FieldResult:
-    """EXECUTE-stage output: float64-exact loop state ready to encode."""
+    """EXECUTE-stage output: float64-exact loop state ready to encode.
 
-    eps: np.ndarray  # final error vector (float64, inside both cubes)
+    ``converged`` is the device loop's flag; when it is False,
+    ``final_violations`` is the pair-weighted full-spectrum count of
+    frequency components still outside the (shrunk) f-cube *after* the
+    float64 polish — the number a caller needs to decide whether to retry
+    with relaxed knobs, reject, or encode-with-warning.  Encoding a
+    non-converged result is safe for the spatial bound (the final state is
+    inside the s-cube by construction) but the frequency bound may be
+    violated at exactly these components.
+    """
+
+    eps: np.ndarray  # final error vector (float64, inside the s-cube)
     spat: np.ndarray  # spatial edit accumulator (float64)
     freq: np.ndarray  # frequency edit accumulator (complex128, rfft layout)
     iterations: int
     converged: bool
+    final_violations: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -410,8 +422,20 @@ class CorrectionEngine:
         if not pointwise:
             Delta_proj = float(Delta_proj)
             Delta = float(Delta)
+        # Infeasible spatial∩frequency intersection is a *request* property:
+        # reject structurally (stage + disposition) instead of letting a bare
+        # exception escape the engine into a serving loop.
         if E_proj <= 0:
-            raise ValueError(f"spatial bound E={E:g} below float32 representability for this data")
+            raise InfeasibleBound(
+                f"spatial bound E={E:g} below float32 representability for this data",
+                stage="plan",
+            )
+        if float(np.min(Delta_proj)) <= 0:
+            raise InfeasibleBound(
+                f"frequency bound Delta={float(np.min(np.asarray(Delta_user))):g} below float32 "
+                f"representability after the quantization shrink (quant_bits={cfg.quant_bits})",
+                stage="plan",
+            )
         return FieldPlan(
             shape=tuple(x32.shape),
             E=E,
@@ -495,30 +519,35 @@ class CorrectionEngine:
         the edit streams — and the blobs built from them — match exactly.
         """
         sharded = isinstance(eps0, ShardedField)
-        if sharded:
-            res = self._pocs_field_sharded(eps0, plan)
-        else:
-            res = alternating_projection(
-                jnp.asarray(eps0, dtype=jnp.float32),
-                plan.E_proj,
-                jnp.asarray(plan.Delta_proj),
-                max_iters=plan.max_iters,
-                use_kernels=plan.use_kernels,
-                relax=plan.relax,
-                check_slack=0.5 * plan.slack_f,
-                fft_impl=plan.fft_impl,
-                check_every=plan.check_every,
-            )
-        # edit state -> host: this is the encode/serialization staging (the
-        # single-device path stages identically); the float64 polish is a
-        # handful of host FFT round trips on the O(residual) edit state.
-        # Sharded state arrives in the padded device layout — slab-pad
-        # rows/columns are exactly zero; slicing them away here restores the
-        # single-device shapes (and values, bitwise on "bitwise"-parity
-        # shapes) before the polish and encode stages.
-        spat = np.asarray(res.spat_edits, dtype=np.float64)
-        freq = np.asarray(res.freq_edits, dtype=np.complex128)
-        eps_f = np.asarray(res.eps, dtype=np.float64)
+        try:
+            if sharded:
+                res = self._pocs_field_sharded(eps0, plan)
+            else:
+                res = alternating_projection(
+                    jnp.asarray(eps0, dtype=jnp.float32),
+                    plan.E_proj,
+                    jnp.asarray(plan.Delta_proj),
+                    max_iters=plan.max_iters,
+                    use_kernels=plan.use_kernels,
+                    relax=plan.relax,
+                    check_slack=0.5 * plan.slack_f,
+                    fft_impl=plan.fft_impl,
+                    check_every=plan.check_every,
+                )
+            # edit state -> host: this is the encode/serialization staging (the
+            # single-device path stages identically); the float64 polish is a
+            # handful of host FFT round trips on the O(residual) edit state.
+            # Sharded state arrives in the padded device layout — slab-pad
+            # rows/columns are exactly zero; slicing them away here restores the
+            # single-device shapes (and values, bitwise on "bitwise"-parity
+            # shapes) before the polish and encode stages.
+            spat = np.asarray(res.spat_edits, dtype=np.float64)
+            freq = np.asarray(res.freq_edits, dtype=np.complex128)
+            eps_f = np.asarray(res.eps, dtype=np.float64)
+        except (RuntimeError, MemoryError) as e:
+            # device dispatch / allocation failures carry stage + disposition
+            # (OOM -> "bisect") so serving loops can act without string-matching
+            raise classify_exception(e, "execute") from e
         if sharded:
             spat = eps0.unpad_spatial(spat)
             eps_f = eps0.unpad_spatial(eps_f)
@@ -526,12 +555,26 @@ class CorrectionEngine:
         eps_f, spat, freq = polish_pocs_float64(
             eps_f, spat, freq, plan.E_proj, np.asarray(plan.Delta_proj, dtype=np.float64)
         )
+        converged = bool(res.converged)
+        final_violations = 0
+        if not converged:
+            # Surface non-convergence with an exact post-polish count: the
+            # float32 loop's exit count may overstate what the float64 polish
+            # could not absorb.  Pair weights keep full-spectrum semantics,
+            # matching the loop's own violation accounting.  (Converged runs
+            # skip the extra host rfftn — the default path pays nothing.)
+            d = np.fft.rfftn(eps_f)
+            tol = np.asarray(plan.Delta_proj, dtype=np.float64)
+            bad = (np.abs(d.real) > tol) | (np.abs(d.imag) > tol)
+            w = np.broadcast_to(np.asarray(rfft_pair_weights(plan.shape)), bad.shape)
+            final_violations = int(np.sum(w * bad))
         return FieldResult(
             eps=eps_f,
             spat=spat,
             freq=freq,
             iterations=int(res.iterations),
-            converged=bool(res.converged),
+            converged=converged,
+            final_violations=final_violations,
         )
 
     def _pocs_field_sharded(self, eps0: ShardedField, plan: FieldPlan):
@@ -599,23 +642,26 @@ class CorrectionEngine:
         ``fft_impl`` overrides the engine default for this call.
         """
         fft_impl = self.fft_impl if fft_impl is None else fft_impl
-        if self.backend == "local":
-            return self._correct_local(
-                tensors, E, Delta, block, max_iters, return_edits, return_corrected, fft_impl
+        try:
+            if self.backend == "local":
+                return self._correct_local(
+                    tensors, E, Delta, block, max_iters, return_edits, return_corrected, fft_impl
+                )
+            return blockwise.correct_batch(
+                tensors,
+                E,
+                Delta,
+                block=block,
+                max_iters=max_iters,
+                return_edits=return_edits,
+                return_corrected=return_corrected,
+                backend=self.backend,
+                mesh=self.mesh if self.backend == "sharded" else None,
+                axis=self.axis,
+                fft_impl=fft_impl,
             )
-        return blockwise.correct_batch(
-            tensors,
-            E,
-            Delta,
-            block=block,
-            max_iters=max_iters,
-            return_edits=return_edits,
-            return_corrected=return_corrected,
-            backend=self.backend,
-            mesh=self.mesh if self.backend == "sharded" else None,
-            axis=self.axis,
-            fft_impl=fft_impl,
-        )
+        except (RuntimeError, MemoryError) as e:
+            raise classify_exception(e, "execute") from e
 
     def _correct_local(
         self, tensors, E, Delta, block, max_iters, return_edits, return_corrected, fft_impl="xla"
@@ -675,8 +721,11 @@ class CorrectionEngine:
             sum_active_delta,
             int(np.prod(plan.shape)) if plan.shape else 1,
         )
-        se = encode_edits(result.spat, plan.E, m=m_s, codec=plan.codec)
-        fe = encode_edits(result.freq, plan.Delta, m=m_f, codec=plan.codec, half_spectrum=True)
+        try:
+            se = encode_edits(result.spat, plan.E, m=m_s, codec=plan.codec)
+            fe = encode_edits(result.freq, plan.Delta, m=m_f, codec=plan.codec, half_spectrum=True)
+        except (RuntimeError, MemoryError, OSError) as e:
+            raise classify_exception(e, "encode") from e
         return se, fe
 
     def encode_pencils(
@@ -707,8 +756,11 @@ class CorrectionEngine:
         m_s, m_f = adaptive_quant_bits(
             plan.quant_bits, k_s_max, plan.E, plan.Delta, wsum_max * plan.Delta, plan.block, cap=40
         )
-        se = encode_edits(spat, plan.E, m=m_s, codec=codec)
-        fe = encode_edits(freq, plan.Delta, m=m_f, codec=codec, half_spectrum=True)
+        try:
+            se = encode_edits(spat, plan.E, m=m_s, codec=codec)
+            fe = encode_edits(freq, plan.Delta, m=m_f, codec=codec, half_spectrum=True)
+        except (RuntimeError, MemoryError, OSError) as e:
+            raise classify_exception(e, "encode") from e
         return se, fe
 
 

@@ -1,0 +1,154 @@
+"""Structured FFCz error taxonomy: stage, cause, and retry disposition.
+
+Every failure that can escape the compression pipeline is classified along
+two axes the serving layer acts on:
+
+  transient vs permanent   will the same call plausibly succeed if repeated?
+  retryable vs reject      should a caller with retry budget try again?
+
+plus a ``disposition`` hint for failures that need a *different* retry, not
+the same one:
+
+  ``"retry"``    re-run the same work (backoff first) — host codec hiccups,
+                 device dispatch failures.
+  ``"bisect"``   the work unit is too large as batched — split it and run
+                 the halves (device allocation failure on a batch).
+  ``"reject"``   no retry will help — infeasible bounds, corrupt bytes.
+  ``"timeout"``  the request's deadline passed; terminal by definition.
+
+Errors carry the pipeline ``stage`` they surfaced in (``plan`` / ``base`` /
+``execute`` / ``encode`` / ``decode`` / ``admit`` / ``service``) and the
+original ``cause`` exception when they wrap one.  The decode-side
+:class:`BlobCorruptError` and the plan-side :class:`InfeasibleBound` also
+subclass ``ValueError`` so pre-taxonomy callers (and tests) that catch
+``ValueError`` keep working unchanged.
+
+:func:`classify_exception` maps arbitrary exceptions from the runtime onto
+this taxonomy — it is how the engine stages and the serving layer turn a
+raw ``XlaRuntimeError`` / ``zlib.error`` / ``MemoryError`` into a disposition
+without string-matching at every call site.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+
+class FFCzError(Exception):
+    """Base of the FFCz failure taxonomy (see module docstring)."""
+
+    transient: bool = False
+    retryable: bool = False
+    disposition: str = "reject"  # "retry" | "bisect" | "reject" | "timeout"
+
+    def __init__(self, message: str, *, stage: Optional[str] = None, cause: Optional[BaseException] = None):
+        super().__init__(message)
+        self.stage = stage
+        self.cause = cause
+
+    def to_dict(self) -> dict:
+        """Wire-friendly structured form for service rejection responses."""
+        return {
+            "type": type(self).__name__,
+            "stage": self.stage,
+            "message": str(self),
+            "transient": self.transient,
+            "retryable": self.retryable,
+            "disposition": self.disposition,
+            "cause": repr(self.cause) if self.cause is not None else None,
+        }
+
+
+class TransientError(FFCzError):
+    """A failure the same call may not reproduce — retry with backoff."""
+
+    transient = True
+    retryable = True
+    disposition = "retry"
+
+
+class HostCodecError(TransientError):
+    """Host-side codec (base compressor / entropy coder) raised mid-stream."""
+
+
+class DeviceDispatchError(TransientError):
+    """Device program dispatch / execution failed for a non-OOM reason."""
+
+
+class ResourceExhausted(FFCzError):
+    """Device allocation failure: not retryable as-is, but a *batch* is —
+    split it and run the halves (``disposition == "bisect"``)."""
+
+    transient = True
+    retryable = False
+    disposition = "bisect"
+
+
+class PermanentError(FFCzError):
+    """No retry will change the outcome — reject with reason."""
+
+
+class InfeasibleBound(PermanentError, ValueError):
+    """The requested spatial/frequency bound pair has no representable
+    intersection (e.g. E underflows float32 after the quantization shrink).
+    A *request* property, not a system fault: structured rejection, never a
+    crash escaping the engine."""
+
+
+class BlobCorruptError(PermanentError, ValueError):
+    """Decode-side: truncated, bit-flipped, or foreign blob bytes.  Every
+    decode path raises this (never a raw ``zlib.error`` / ``struct.error``)
+    so untrusted inputs cannot crash a server with an unclassified
+    exception."""
+
+    def __init__(self, message: str, *, stage: str = "decode", cause: Optional[BaseException] = None):
+        super().__init__(message, stage=stage, cause=cause)
+
+
+class DeadlineExceeded(PermanentError):
+    """The request's deadline passed before the work completed."""
+
+    disposition = "timeout"
+
+
+_OOM_MARKERS = (
+    "RESOURCE_EXHAUSTED",
+    "out of memory",
+    "Out of memory",
+    "Allocation failure",
+    "failed to allocate",
+)
+
+
+def is_oom(exc: BaseException) -> bool:
+    """Device/host allocation failure, by type or by runtime message."""
+    if isinstance(exc, MemoryError):
+        return True
+    msg = str(exc)
+    return any(marker in msg for marker in _OOM_MARKERS)
+
+
+def classify_exception(exc: BaseException, stage: str) -> FFCzError:
+    """Map an arbitrary exception onto the taxonomy.
+
+    Already-classified errors pass through (gaining ``stage`` if unset).
+    Allocation failures become :class:`ResourceExhausted` (bisect), OS-level
+    errors become :class:`HostCodecError` (retry), runtime/dispatch errors —
+    including ``jaxlib``'s ``XlaRuntimeError``, a ``RuntimeError`` subclass —
+    become :class:`DeviceDispatchError` (retry), and contract violations
+    (``ValueError`` / ``TypeError`` / ``KeyError``) become
+    :class:`PermanentError` (reject).  Anything else is conservatively
+    permanent: an unknown failure must never spin a retry loop.
+    """
+    if isinstance(exc, FFCzError):
+        if exc.stage is None:
+            exc.stage = stage
+        return exc
+    msg = f"{type(exc).__name__}: {exc}"
+    if is_oom(exc):
+        return ResourceExhausted(msg, stage=stage, cause=exc)
+    if isinstance(exc, (OSError, EOFError)):
+        return HostCodecError(msg, stage=stage, cause=exc)
+    if isinstance(exc, RuntimeError):
+        return DeviceDispatchError(msg, stage=stage, cause=exc)
+    return PermanentError(msg, stage=stage, cause=exc)

@@ -45,6 +45,7 @@ import numpy as np
 from repro.coding.quantize import DEFAULT_QUANT_BITS
 from repro.core.cubes import rfft_shape
 from repro.core.edits import EncodedEdits, decode_edits
+from repro.core.errors import BlobCorruptError, FFCzError
 from repro.core.engine import (  # re-exported for backward compatibility
     CorrectionEngine,
     adaptive_quant_bits,
@@ -55,6 +56,7 @@ from repro.core.engine import (  # re-exported for backward compatibility
 from repro.sharding.dist_fft import ShardedField
 
 __all__ = [
+    "BlobCorruptError",
     "FFCz",
     "FFCzBlob",
     "FFCzConfig",
@@ -107,6 +109,12 @@ class FFCzConfig:
     # K > 1 trades up-to-K-1 late convergence for one reduction (and one
     # psum, in distributed mode) per skipped iteration.
     check_every: int = 1
+    # Append a per-section CRC32 tail (``FFCC`` marker) to written blobs so
+    # bit flips that structural validation cannot see are caught at decode.
+    # Off by default: the tail changes the blob bytes, and the default path
+    # stays byte-identical to earlier writers.  Decoding verifies the tail
+    # whenever one is present, regardless of this flag.
+    crc: bool = False
 
     def __post_init__(self):
         if (self.E_abs is None) == (self.E_rel is None):
@@ -132,6 +140,11 @@ class FFCzStats:
     edit_bytes: int
     spatial_margin: float  # min(E - |eps|) over points, >= 0 means bound held
     frequency_margin: float  # min(Delta - max(|Re d|,|Im d|)), >= 0 means held
+    # Pair-weighted count of frequency components still outside the shrunk
+    # f-cube after the float64 polish; 0 whenever ``converged``.  Non-zero
+    # means the POCS budget ran out: the spatial bound still holds, the
+    # frequency bound is violated at exactly this many components.
+    final_violations: int = 0
 
     @property
     def total_bytes(self) -> int:
@@ -143,6 +156,10 @@ _WIRE_VERSION = 1
 _V0_HEADER = "<ddBQQQQ"  # E, Delta_scalar, ndim, len(base), len(se), len(fe), len(pw)
 _PAD_MAGIC = b"FFCP"
 _PAD_HEADER = "<IB"  # n_dev (u32), ndim (u8); then ndim * u64 padded shape
+# Optional integrity tail (sniffed like FFCP): u8 count, then count * u32
+# CRC32s — whole-blob-so-far, base, spat_edits, freq_edits, pointwise.
+_CRC_MAGIC = b"FFCC"
+_CRC_SECTIONS = ("header", "base", "spat_edits", "freq_edits", "pointwise")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,14 +189,24 @@ class PadMeta:
 
     @staticmethod
     def from_bytes(data: bytes) -> "PadMeta":
-        head = len(_PAD_MAGIC) + struct.calcsize(_PAD_HEADER)
-        if len(data) < head or data[: len(_PAD_MAGIC)] != _PAD_MAGIC:
-            raise ValueError("corrupt FFCz blob: trailing bytes are not a pad-metadata section")
-        n_dev, ndim = struct.unpack_from(_PAD_HEADER, data, len(_PAD_MAGIC))
-        if ndim > 16 or len(data) != head + 8 * ndim:
-            raise ValueError("corrupt FFCz blob: malformed pad-metadata section")
+        meta, end = PadMeta._parse_at(data, 0)
+        if end != len(data):
+            raise BlobCorruptError("corrupt FFCz blob: malformed pad-metadata section")
+        return meta
+
+    @staticmethod
+    def _parse_at(data: bytes, pos: int) -> tuple:
+        """Parse one FFCP section starting at ``pos``; returns (meta, end)."""
+        head = pos + len(_PAD_MAGIC) + struct.calcsize(_PAD_HEADER)
+        if len(data) < head or data[pos : pos + len(_PAD_MAGIC)] != _PAD_MAGIC:
+            raise BlobCorruptError(
+                "corrupt FFCz blob: trailing bytes are not a pad-metadata section"
+            )
+        n_dev, ndim = struct.unpack_from(_PAD_HEADER, data, pos + len(_PAD_MAGIC))
+        if ndim > 16 or len(data) < head + 8 * ndim:
+            raise BlobCorruptError("corrupt FFCz blob: malformed pad-metadata section")
         shape = struct.unpack_from(f"<{ndim}Q", data, head)
-        return PadMeta(n_dev=n_dev, padded_shape=tuple(shape))
+        return PadMeta(n_dev=n_dev, padded_shape=tuple(shape)), head + 8 * ndim
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,6 +245,11 @@ class FFCzBlob:
     # Optional slab-decomposition provenance (uneven sharded writers only);
     # informational — see PadMeta.
     pad_meta: Optional[PadMeta] = None
+    # Write (and re-write) the optional FFCC per-section CRC32 tail.  Set by
+    # the parser when the section is present, so decode -> re-encode stays
+    # byte-stable in both directions; blobs without the tail (every pre-CRC
+    # writer) stay byte-identical.
+    crc: bool = False
 
     def to_bytes(self) -> bytes:
         se = self.spat_edits.to_bytes()
@@ -236,57 +268,82 @@ class FFCzBlob:
         )
         header += struct.pack(f"<{len(self.shape)}Q", *self.shape)
         tail = self.pad_meta.to_bytes() if self.pad_meta is not None else b""
-        return header + self.base_blob + se + fe + pw + tail
+        out = header + self.base_blob + se + fe + pw + tail
+        if self.crc:
+            import zlib
+
+            crcs = [zlib.crc32(out)] + [zlib.crc32(s) for s in (self.base_blob, se, fe, pw)]
+            out += _CRC_MAGIC + struct.pack("<B", len(crcs)) + struct.pack(f"<{len(crcs)}I", *crcs)
+        return out
 
     def payload_bytes(self) -> bytes:
-        """Blob bytes with the informational pad-metadata tail stripped —
-        the unit of cross-backend byte parity for ``"bitwise"`` shapes."""
-        if self.pad_meta is None:
+        """Blob bytes with the informational pad-metadata and CRC tails
+        stripped — the unit of cross-backend byte parity for ``"bitwise"``
+        shapes."""
+        if self.pad_meta is None and not self.crc:
             return self.to_bytes()
-        return dataclasses.replace(self, pad_meta=None).to_bytes()
+        return dataclasses.replace(self, pad_meta=None, crc=False).to_bytes()
 
     @staticmethod
     def from_bytes(data: bytes) -> "FFCzBlob":
-        if data[:4] == _MAGIC:
-            if len(data) < 5:
-                raise ValueError("truncated FFCz blob: magic without version byte")
-            version = data[4]
-            if version != _WIRE_VERSION:
-                raise ValueError(f"unsupported FFCz blob version {version}")
-            return FFCzBlob._parse(data, offset=5)
-        # version-0 sniff: magic-less blobs start directly with the header
-        return FFCzBlob._parse(data, offset=0)
+        try:
+            if data[:4] == _MAGIC:
+                if len(data) < 5:
+                    raise BlobCorruptError("truncated FFCz blob: magic without version byte")
+                version = data[4]
+                if version != _WIRE_VERSION:
+                    raise BlobCorruptError(f"unsupported FFCz blob version {version}")
+                return FFCzBlob._parse(data, offset=5)
+            # version-0 sniff: magic-less blobs start directly with the header
+            return FFCzBlob._parse(data, offset=0)
+        except FFCzError:
+            raise
+        except Exception as e:
+            # untrusted bytes: struct/slice/decode failures all classify as
+            # corruption, never an unstructured crash
+            raise BlobCorruptError(f"corrupt FFCz blob: {type(e).__name__}: {e}", cause=e) from e
 
     @staticmethod
     def _parse(data: bytes, offset: int) -> "FFCzBlob":
         head = struct.calcsize(_V0_HEADER)
         if len(data) < offset + head:
-            raise ValueError(f"truncated FFCz blob: {len(data)} bytes < {offset + head}-byte header")
+            raise BlobCorruptError(
+                f"truncated FFCz blob: {len(data)} bytes < {offset + head}-byte header"
+            )
         E, Delta, ndim, nb, ns, nf, npw = struct.unpack_from(_V0_HEADER, data, offset)
         off = offset + head
         if ndim > 16:
-            raise ValueError(f"not an FFCz blob: implausible rank {ndim}")
+            raise BlobCorruptError(f"not an FFCz blob: implausible rank {ndim}")
         if len(data) < off + 8 * ndim:
-            raise ValueError("truncated FFCz blob: shape table cut off")
+            raise BlobCorruptError("truncated FFCz blob: shape table cut off")
         shape = struct.unpack_from(f"<{ndim}Q", data, off)
         off += 8 * ndim
         expected = off + nb + ns + nf + npw
         if len(data) < expected:
-            raise ValueError(
+            raise BlobCorruptError(
                 f"corrupt FFCz blob: {len(data)} bytes, section table wants {expected}"
             )
-        # optional trailing pad-metadata section, sniffed by its FFCP marker
-        # (absent in v0 and pad-free v1 blobs); any other tail is corruption
-        pad_meta = None
-        if len(data) > expected:
-            pad_meta = PadMeta.from_bytes(data[expected:])
         base = data[off : off + nb]
-        off += nb
-        se = EncodedEdits.from_bytes(data[off : off + ns])
-        off += ns
-        fe = EncodedEdits.from_bytes(data[off : off + nf])
-        off += nf
-        pw = data[off : off + npw] if npw else None
+        se_raw = data[off + nb : off + nb + ns]
+        fe_raw = data[off + nb + ns : off + nb + ns + nf]
+        pw = data[off + nb + ns + nf : expected] if npw else None
+        # optional tail sections, each sniffed by its marker: FFCP pad
+        # metadata, then the FFCC integrity section (always last, since its
+        # leading CRC covers every byte before it); any other tail bytes are
+        # corruption.  v0 and tail-free v1 blobs take none of these branches.
+        pad_meta, has_crc, pos = None, False, expected
+        if data[pos : pos + 4] == _PAD_MAGIC:
+            pad_meta, pos = PadMeta._parse_at(data, pos)
+        if data[pos : pos + 4] == _CRC_MAGIC:
+            FFCzBlob._verify_crc(data, pos, (base, se_raw, fe_raw, pw or b""))
+            # fixed-size tail: magic + count byte + 5 verified u32 CRCs
+            has_crc, pos = True, pos + 4 + 1 + 4 * len(_CRC_SECTIONS)
+        if pos != len(data):
+            raise BlobCorruptError(
+                "corrupt FFCz blob: trailing bytes are not a pad-metadata or CRC section"
+            )
+        se = EncodedEdits.from_bytes(se_raw)
+        fe = EncodedEdits.from_bytes(fe_raw)
         return FFCzBlob(
             base_blob=base,
             spat_edits=se,
@@ -296,7 +353,35 @@ class FFCzBlob:
             pointwise_delta=pw,
             shape=tuple(shape),
             pad_meta=pad_meta,
+            crc=has_crc,
         )
+
+    @staticmethod
+    def _verify_crc(data: bytes, pos: int, sections: tuple) -> None:
+        """Validate the FFCC tail at ``pos`` against the parsed sections.
+
+        The leading CRC covers every byte before the tail (header included);
+        the per-section CRCs localize a mismatch to the corrupt section for
+        the error message.
+        """
+        import zlib
+
+        tail_head = pos + 4 + 1
+        if len(data) < tail_head:
+            raise BlobCorruptError("corrupt FFCz blob: truncated CRC section")
+        n = data[pos + 4]
+        if n != len(_CRC_SECTIONS) or len(data) < tail_head + 4 * n:
+            raise BlobCorruptError("corrupt FFCz blob: malformed CRC section")
+        stored = struct.unpack_from(f"<{n}I", data, tail_head)
+        actual = (zlib.crc32(data[:pos]),) + tuple(zlib.crc32(b) for b in sections)
+        if stored == actual:
+            return
+        # All five must match: a mismatch confined to a stored per-section CRC
+        # (leading CRC fine) still means the tail bytes were flipped.
+        for name, s, a in zip(_CRC_SECTIONS[1:], stored[1:], actual[1:]):
+            if s != a:
+                raise BlobCorruptError(f"corrupt FFCz blob: CRC mismatch in {name} section")
+        raise BlobCorruptError("corrupt FFCz blob: CRC mismatch in header section")
 
     def nbytes(self) -> int:
         return len(self.to_bytes())
@@ -367,34 +452,64 @@ class FFCz:
             pointwise_delta=plan.pointwise_bytes(),
             shape=plan.shape,
             pad_meta=pad_meta,
+            crc=cfg.crc,
         )
 
         stats = None
         if cfg.verify:
-            x_final = self.decompress(blob)
-            eps = x_final.astype(np.float64) - x32.astype(np.float64)
-            # half-spectrum check is exhaustive: every full-spectrum component
-            # shares |Re|/|Im| (and its Delta_k) with its conjugate image here
-            d = np.fft.rfftn(eps)
-            spatial_margin = float(plan.E - np.max(np.abs(eps)))
-            freq_excess = np.maximum(np.abs(d.real), np.abs(d.imag)) - np.asarray(plan.Delta)
-            frequency_margin = float(-np.max(freq_excess))
-            stats = FFCzStats(
-                iterations=result.iterations,
-                converged=result.converged,
-                n_active_spatial=se.n_active,
-                n_active_frequency=fe.n_active,
-                base_bytes=len(base_blob),
-                edit_bytes=se.nbytes() + fe.nbytes(),
-                spatial_margin=spatial_margin,
-                frequency_margin=frequency_margin,
-            )
+            stats = self.verify_stats(blob, x32, result, plan=plan)
         return dataclasses.replace(blob, stats=stats)
+
+    def verify_stats(self, blob: FFCzBlob, x32: np.ndarray, result, plan=None) -> FFCzStats:
+        """Decode ``blob`` back and measure both bound margins against ``x32``.
+
+        Factored out of :meth:`compress` so the serving layer can verify a
+        blob it assembled through the staged engine path (plan / execute /
+        encode) without re-running compression; ``plan`` is recomputed when
+        the caller no longer holds it (planning is deterministic).
+        """
+        if plan is None:
+            plan = self.engine.plan_field(x32, self.config)
+        x_final = self.decompress(blob)
+        eps = x_final.astype(np.float64) - x32.astype(np.float64)
+        # half-spectrum check is exhaustive: every full-spectrum component
+        # shares |Re|/|Im| (and its Delta_k) with its conjugate image here
+        d = np.fft.rfftn(eps)
+        spatial_margin = float(plan.E - np.max(np.abs(eps)))
+        freq_excess = np.maximum(np.abs(d.real), np.abs(d.imag)) - np.asarray(plan.Delta)
+        frequency_margin = float(-np.max(freq_excess))
+        return FFCzStats(
+            iterations=result.iterations,
+            converged=result.converged,
+            n_active_spatial=blob.spat_edits.n_active,
+            n_active_frequency=blob.freq_edits.n_active,
+            base_bytes=len(blob.base_blob),
+            edit_bytes=blob.spat_edits.nbytes() + blob.freq_edits.nbytes(),
+            spatial_margin=spatial_margin,
+            frequency_margin=frequency_margin,
+            final_violations=result.final_violations,
+        )
 
     # -- decompression ----------------------------------------------------
 
     def decompress(self, blob: FFCzBlob) -> np.ndarray:
+        try:
+            return self._decompress(blob)
+        except FFCzError:
+            raise
+        except Exception as e:
+            # decode consumes untrusted bytes end to end: any failure past
+            # structural validation (codec garbage that entropy-decodes to the
+            # wrong element count, off-shape buffers) is still corruption
+            raise BlobCorruptError(f"corrupt FFCz blob: {type(e).__name__}: {e}", cause=e) from e
+
+    def _decompress(self, blob: FFCzBlob) -> np.ndarray:
         x_hat = np.asarray(self.base.decompress(blob.base_blob), dtype=np.float32)
+        if x_hat.shape != tuple(blob.shape):
+            raise BlobCorruptError(
+                f"corrupt FFCz blob: base section decodes to shape {x_hat.shape}, "
+                f"header says {tuple(blob.shape)}"
+            )
         half = blob.freq_edits.half_spectrum
         if blob.pointwise_delta is not None:
             # pointwise Delta_k grid, stored in the blob (Observation 4 mode);

@@ -1,0 +1,118 @@
+"""FFCz compression service entry point with a built-in load generator.
+
+Drives :class:`repro.serving.ffcz_service.FFCzService` with a synthetic
+mixed workload (whole-field + pencil compressions + decodes, a fraction of
+them deliberately corrupted) under optional deterministic fault injection,
+then prints the outcome table, latency percentiles, and the service's
+failure-machinery counters.
+
+    PYTHONPATH=src python -m repro.launch.serve_ffcz --requests 16
+    PYTHONPATH=src python -m repro.launch.serve_ffcz --requests 32 \
+        --p-codec 0.3 --p-dispatch 0.3 --p-oom 0.5 --p-slow 0.1 --slow-s 120 \
+        --corrupt-frac 0.25 --seed 7
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.compressors import get_compressor
+from repro.core.ffcz import FFCzConfig
+from repro.runtime.faults import FaultConfig, FaultInjector
+from repro.serving.ffcz_service import FFCzService, ServiceConfig
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=16, help="total requests to generate")
+    ap.add_argument("--seed", type=int, default=0, help="workload + fault stream seed")
+    ap.add_argument("--base", default="szlike", help="base compressor name")
+    ap.add_argument("--field-size", type=int, default=24, help="whole-field edge length")
+    ap.add_argument("--max-batch", type=int, default=8, help="pencil requests fused per step")
+    ap.add_argument("--block", type=int, default=128, help="pencil length")
+    ap.add_argument("--deadline-s", type=float, default=30.0, help="per-request deadline")
+    ap.add_argument("--max-retries", type=int, default=3, help="transient retry budget")
+    ap.add_argument("--e-rel", type=float, default=1e-3)
+    ap.add_argument("--delta-rel", type=float, default=1e-3)
+    ap.add_argument("--crc", action="store_true", help="append CRC tails to field blobs")
+    ap.add_argument("--pencil-frac", type=float, default=0.5,
+                    help="fraction of compressions taking the blockwise path")
+    ap.add_argument("--corrupt-frac", type=float, default=0.0,
+                    help="fraction of decode requests fed corrupted bytes")
+    # fault-injection knobs (all off by default)
+    ap.add_argument("--p-codec", type=float, default=0.0, help="host codec fault probability")
+    ap.add_argument("--p-dispatch", type=float, default=0.0, help="device dispatch fault probability")
+    ap.add_argument("--p-oom", type=float, default=0.0, help="device OOM probability")
+    ap.add_argument("--p-slow", type=float, default=0.0, help="slow-request probability")
+    ap.add_argument("--slow-s", type=float, default=0.0, help="injected slowness (seconds)")
+    ap.add_argument("--max-per-site", type=int, default=2, help="fire cap per fault site")
+    args = ap.parse_args()
+
+    injector = None
+    if args.p_codec or args.p_dispatch or args.p_oom or args.p_slow:
+        injector = FaultInjector(
+            FaultConfig(
+                p_codec=args.p_codec,
+                p_dispatch=args.p_dispatch,
+                p_oom=args.p_oom,
+                p_slow=args.p_slow,
+                slow_s=args.slow_s,
+                max_per_site=args.max_per_site,
+            ),
+            seed=args.seed,
+        )
+    svc = FFCzService(
+        get_compressor(args.base),
+        config=ServiceConfig(
+            max_batch=args.max_batch,
+            block=args.block,
+            deadline_s=args.deadline_s,
+            max_retries=args.max_retries,
+            seed=args.seed,
+        ),
+        injector=injector,
+    )
+    cfg = FFCzConfig(E_rel=args.e_rel, Delta_rel=args.delta_rel, max_iters=300,
+                     verify=False, crc=args.crc)
+
+    rng = np.random.default_rng(args.seed)
+    n = args.field_size
+    for _ in range(args.requests):
+        if rng.random() < args.pencil_frac:
+            size = int(rng.integers(args.block // 2, 4 * args.block))
+            svc.submit_pencils(rng.standard_normal(size).astype(np.float32),
+                               args.e_rel, args.delta_rel)
+        else:
+            svc.submit_compress(rng.standard_normal((n, n)).astype(np.float32), cfg)
+    responses = dict(svc.drain())
+
+    # feed a sample of the produced blobs back through decode
+    blobs = [r.payload for r in responses.values() if r.ok]
+    for i, blob in enumerate(blobs):
+        if args.corrupt_frac and rng.random() < args.corrupt_frac:
+            blob = injector.corrupt_blob(blob) if injector else blob[: len(blob) // 2]
+        responses[svc.submit_decompress(blob, uid=f"dec-{i}")] = None
+    responses.update(svc.drain())
+
+    lat = []
+    for uid in sorted(responses, key=lambda u: (len(u), u)):
+        r = responses[uid]
+        if r is None:
+            continue
+        lat.append(r.stats.latency_s)
+        rungs = ",".join(r.stats.rungs) or "-"
+        if r.ok:
+            size = len(r.payload) if isinstance(r.payload, bytes) else r.payload.size
+            print(f"{uid:>8}  ok        rungs={rungs}  bytes/elems={size}")
+        else:
+            print(f"{uid:>8}  REJECTED  rungs={rungs}  {r.error['type']}: {r.error['message']}")
+    lat = np.sort(np.asarray(lat))
+    p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
+    print(f"\n{len(lat)} requests drained  p50={p50 * 1e3:.1f}ms  p99={p99 * 1e3:.1f}ms")
+    print("counters:", dict(svc.counters))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Deterministic fault injection for exercising the FFCz service failure path.
+
+The chaos suite (tests/test_faults.py) needs the *same* faults on every run:
+a flaky test that only sometimes exercises the retry ladder proves nothing.
+So every probabilistic decision here flows from one seeded
+``np.random.default_rng`` stream, and the injector draws in a fixed order at
+each site — given the same seed and the same sequence of ``fire`` calls, the
+same faults fire.
+
+Injection sites mirror the real failure surface of the pipeline:
+
+  ``codec``     host base-codec / entropy-coder failure (``OSError``-shaped,
+                classified transient -> retried with backoff)
+  ``dispatch``  device program dispatch failure (``RuntimeError``-shaped,
+                transient -> retried; the service's ladder also descends
+                fft_impl rungs when retries exhaust)
+  ``oom``       device allocation failure (message carries the XLA
+                ``RESOURCE_EXHAUSTED`` marker -> batch bisection)
+  ``slow``      the request takes ``slow_s`` longer than it should (tests the
+                deadline path; returned as a delay, never an exception)
+
+plus two pure byte-corruption helpers (``flip_bit`` / ``truncate``) for the
+decode-hardening fuzz tests.
+
+``max_per_site`` caps how many times each site fires so an injector with
+``p=1.0`` still lets the work eventually succeed — that is exactly the
+"transient" contract the retry ladder is built for.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class InjectedCodecError(OSError):
+    """Injected host-codec failure (classifies as HostCodecError -> retry)."""
+
+
+class InjectedDispatchError(RuntimeError):
+    """Injected device-dispatch failure (classifies as DeviceDispatchError)."""
+
+
+class InjectedOOM(RuntimeError):
+    """Injected device allocation failure; the message carries the XLA OOM
+    marker so :func:`repro.core.errors.is_oom` classifies it for bisection."""
+
+    def __init__(self, message: str = "injected allocation failure"):
+        # the marker must survive any caller-supplied message, or the error
+        # classifies as a plain dispatch failure and gets retried not bisected
+        super().__init__(f"RESOURCE_EXHAUSTED: {message}")
+
+
+_SITE_ERRORS = {
+    "codec": InjectedCodecError,
+    "dispatch": InjectedDispatchError,
+    "oom": InjectedOOM,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Per-site fire probabilities and knobs for one injector."""
+
+    p_codec: float = 0.0
+    p_dispatch: float = 0.0
+    p_oom: float = 0.0
+    p_slow: float = 0.0
+    slow_s: float = 0.0  # extra latency charged to a request when "slow" fires
+    # Per-site fire cap: after this many fires a site goes quiet, so even
+    # p=1.0 faults stay transient and the retry ladder can drain the queue.
+    max_per_site: int = 2
+
+    def probability(self, site: str) -> float:
+        try:
+            return {
+                "codec": self.p_codec,
+                "dispatch": self.p_dispatch,
+                "oom": self.p_oom,
+                "slow": self.p_slow,
+            }[site]
+        except KeyError:
+            raise ValueError(f"unknown fault site {site!r}") from None
+
+
+class FaultInjector:
+    """Seeded source of faults; ``None`` config or all-zero probabilities
+    makes every call a no-op, so production code paths can call into an
+    always-present injector unconditionally."""
+
+    def __init__(self, config: Optional[FaultConfig] = None, seed: int = 0):
+        self.config = config or FaultConfig()
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+        self.fired: Dict[str, int] = {}
+
+    # -- exception sites --------------------------------------------------
+
+    def fire(self, site: str, uid: str = "") -> None:
+        """Raise the site's injected error if the (seeded) die says so.
+
+        ``uid`` only labels the raised message — the decision itself comes
+        from the shared stream so the draw order, not the caller identity,
+        determines reproducibility.
+        """
+        if not self._draw(site):
+            return
+        exc_type = _SITE_ERRORS[site]
+        raise exc_type(f"injected {site} fault (uid={uid}, fire #{self.fired[site]})")
+
+    def sleep_s(self) -> float:
+        """Extra latency to charge the current request (0.0 when the ``slow``
+        site does not fire).  Returned, not slept: the service adds it to the
+        request's clock so deadline tests stay fast."""
+        return self.config.slow_s if self._draw("slow") else 0.0
+
+    def _draw(self, site: str) -> bool:
+        p = self.config.probability(site)
+        if p <= 0.0:
+            return False
+        if self.fired.get(site, 0) >= self.config.max_per_site:
+            return False
+        # Always consume exactly one draw per call so fire/no-fire sequences
+        # are reproducible regardless of which sites are enabled.
+        hit = bool(self._rng.random() < p)
+        if hit:
+            self.fired[site] = self.fired.get(site, 0) + 1
+        return hit
+
+    # -- byte corruption (decode fuzzing) ---------------------------------
+
+    def flip_bit(self, blob: bytes, position: Optional[int] = None) -> bytes:
+        """Return ``blob`` with one bit flipped (seeded position by default)."""
+        if not blob:
+            return blob
+        if position is None:
+            position = int(self._rng.integers(0, len(blob) * 8))
+        byte_i, bit_i = divmod(position, 8)
+        out = bytearray(blob)
+        out[byte_i] ^= 1 << bit_i
+        return bytes(out)
+
+    def truncate(self, blob: bytes, keep: Optional[int] = None) -> bytes:
+        """Return a truncated prefix of ``blob`` (seeded length by default)."""
+        if keep is None:
+            keep = int(self._rng.integers(0, len(blob)))
+        return blob[:keep]
+
+    def corrupt_blob(self, blob: bytes) -> bytes:
+        """Randomly flip a bit or truncate — the mixed-mode fuzz primitive."""
+        if self._rng.random() < 0.5:
+            return self.flip_bit(blob)
+        return self.truncate(blob)

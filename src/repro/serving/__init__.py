@@ -1,5 +1,20 @@
-"""Batched serving engine with FFCz KV-cache compression."""
+"""Batched serving engines: LM decode + fault-tolerant FFCz compression."""
 
 from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving.ffcz_service import (
+    FFCzService,
+    RequestStats,
+    ServiceConfig,
+    ServiceResponse,
+    decode_pencil_blob,
+)
 
-__all__ = ["ServingEngine", "ServeConfig"]
+__all__ = [
+    "ServingEngine",
+    "ServeConfig",
+    "FFCzService",
+    "ServiceConfig",
+    "ServiceResponse",
+    "RequestStats",
+    "decode_pencil_blob",
+]

@@ -47,8 +47,25 @@ class ServingEngine:
         self._uid = 0
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        """Validate and queue one request.
+
+        Validation happens at submission, not batch assembly: an empty
+        prompt admitted here would crash ``_make_batch``'s max() (and an
+        out-of-vocab id would index garbage embeddings) several steps later,
+        in a batch shared with innocent requests.
+        """
+        prompt = np.asarray(prompt, dtype=np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(f"prompt must be a non-empty 1-D token array, got shape {prompt.shape}")
+        if prompt.size > self.serve.max_len:
+            raise ValueError(f"prompt length {prompt.size} exceeds max_len={self.serve.max_len}")
+        lo, hi = int(prompt.min()), int(prompt.max())
+        if lo < 0 or hi >= self.cfg.vocab:
+            raise ValueError(f"prompt ids must be in [0, {self.cfg.vocab}), got range [{lo}, {hi}]")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
         self._uid += 1
-        self.queue.append(Request(self._uid, np.asarray(prompt, dtype=np.int32), max_new_tokens))
+        self.queue.append(Request(self._uid, prompt, max_new_tokens))
         return self._uid
 
     def _make_batch(self, reqs: List[Request]) -> Dict[str, Any]:

@@ -1,0 +1,628 @@
+"""Fault-tolerant FFCz compression service: queue, retries, degradation ladder.
+
+:class:`FFCzService` fronts one :class:`~repro.core.engine.CorrectionEngine`
+with a request queue admitting heterogeneous (shape, dtype, bound) work:
+
+  whole-field compress    the paper pipeline (plan / base / execute / encode),
+                          one request per field
+  pencil compress         blockwise requests bucketed — up to ``max_batch``
+                          queued tensors run as ONE ``engine.correct`` call
+                          on the donated batched buffer, each with its own
+                          resolved (E, Delta)
+  decompress              hardened decode of service or FFCz blobs
+
+The headline is the failure path, not the happy path.  Every request drains
+to exactly one of completed-within-bounds or rejected-with-reason:
+
+  retries      transient errors (host codec, device dispatch) re-run the
+               failing stage with exponential backoff + seeded jitter, up to
+               ``max_retries`` per request, inside a per-request deadline.
+  ladder       when retries exhaust on the POCS transform — or the loop ends
+               non-converged — the service degrades instead of failing:
+               first a relaxed re-run (``max_iters`` x4, over-relaxation),
+               then fft_impl rungs pallas -> packed -> xla.  Each rung taken
+               is recorded in the request's stats.
+  bisect       a device allocation failure on a pencil bucket splits the
+               bucket and runs the halves (recursively, down to one request,
+               which is then rejected with the structured OOM).
+  reject       infeasible bound intersections (:class:`InfeasibleBound`),
+               corrupt blobs (:class:`BlobCorruptError`), and exhausted
+               budgets return a structured error dict — never a raw
+               exception out of :meth:`step`, and never a hang: every
+               :meth:`step` retires at least one queued request.
+  timeout      a request whose deadline passes mid-stage is rejected with
+               :class:`DeadlineExceeded` (disposition ``"timeout"``).
+
+A :class:`~repro.runtime.faults.FaultInjector` can be threaded through every
+stage boundary for deterministic chaos testing (tests/test_faults.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+import time
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.edits import EncodedEdits, decode_edits
+from repro.core.engine import CorrectionEngine, default_engine
+from repro.core.errors import (
+    DeadlineExceeded,
+    FFCzError,
+    InfeasibleBound,
+    ResourceExhausted,
+    BlobCorruptError,
+    classify_exception,
+)
+from repro.core.ffcz import FFCz, FFCzBlob, FFCzConfig
+
+__all__ = [
+    "ServiceConfig",
+    "ServiceResponse",
+    "RequestStats",
+    "FFCzService",
+    "decode_pencil_blob",
+]
+
+# fft_impl degradation rungs: each key falls back to its value when the POCS
+# transform keeps failing (or won't converge); "xla" is the floor.
+_LADDER = {"pallas": "packed", "packed": "xla"}
+
+# service pencil-blob envelope: magic, version, <ddIB> E/Delta/block/ndim,
+# ndim * u64 shape, <QQQ> section lengths, sections, trailing u32 CRC32 of
+# every preceding byte.  A new wire format (no legacy writers), so the CRC
+# is unconditional.
+_PENCIL_MAGIC = b"FFSB"
+_PENCIL_VERSION = 1
+_PENCIL_HEADER = "<ddIB"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Queue, retry, and degradation knobs for one :class:`FFCzService`."""
+
+    max_batch: int = 8  # pencil requests fused per engine.correct call
+    block: int = 256  # pencil length for blockwise requests
+    max_iters: int = 50  # POCS budget for pencil buckets
+    deadline_s: float = 30.0  # default per-request deadline
+    max_retries: int = 3  # per-request transient-retry budget
+    backoff_base_s: float = 0.002
+    backoff_factor: float = 2.0
+    backoff_jitter: float = 0.5  # uniform [0, jitter) fraction added per delay
+    # Non-convergence rung: one re-run with max_iters x this and
+    # over-relaxed projections before encoding a non-converged result.
+    relax_on_nonconvergence: bool = True
+    relax_iters_mult: int = 4
+    relax_factor: float = 1.3
+    seed: int = 0  # backoff-jitter stream (determinism under test)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestStats:
+    """Per-request accounting: what the failure machinery actually did."""
+
+    attempts: int  # transient retries consumed
+    rungs: Tuple[str, ...]  # degradation rungs taken, in order
+    latency_s: float  # admit -> retire (includes injected slowness)
+    fft_impl: Optional[str] = None  # transform the final attempt ran with
+    converged: Optional[bool] = None
+    final_violations: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceResponse:
+    uid: str
+    ok: bool
+    payload: Any = None  # blob bytes (compress) or ndarray (decompress)
+    error: Optional[dict] = None  # FFCzError.to_dict() when not ok
+    stats: Optional[RequestStats] = None
+
+
+@dataclasses.dataclass
+class _Request:
+    uid: str
+    kind: str  # "field" | "pencils" | "decompress"
+    payload: Any
+    cfg: Any  # FFCzConfig (field) | (E_rel, Delta_rel) (pencils) | None
+    deadline_s: float
+    t0: float = 0.0
+    penalty_s: float = 0.0  # injected slowness, charged against the deadline
+    attempts: int = 0
+    rungs: List[str] = dataclasses.field(default_factory=list)
+    fft_impl: Optional[str] = None
+    converged: Optional[bool] = None
+    final_violations: int = 0
+
+    def elapsed(self, now: float) -> float:
+        return (now - self.t0) + self.penalty_s
+
+
+class FFCzService:
+    """Continuous-batching FFCz compress/decompress front end (see module
+    docstring for the failure-path contract)."""
+
+    def __init__(
+        self,
+        base: Any,
+        engine: Optional[CorrectionEngine] = None,
+        config: ServiceConfig = ServiceConfig(),
+        injector: Any = None,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        self.base = base
+        self.engine = engine or default_engine()
+        self.config = config
+        self.injector = injector  # None, or a repro.runtime.faults.FaultInjector
+        self._clock = clock
+        self._sleep = sleep
+        self._rng = np.random.default_rng(config.seed)
+        self._queue: List[_Request] = []
+        self._next_uid = 0
+        self.counters: Dict[str, int] = {
+            "completed": 0,
+            "rejected": 0,
+            "retries": 0,
+            "fallbacks": 0,
+            "relaxes": 0,
+            "bisects": 0,
+            "timeouts": 0,
+        }
+
+    # -- admission ---------------------------------------------------------
+
+    def _admit(self, req: _Request) -> str:
+        req.t0 = self._clock()
+        if self.injector is not None:
+            # injected slowness is charged to the request's clock, not slept,
+            # so deadline tests run in real milliseconds
+            req.penalty_s = self.injector.sleep_s()
+        self._queue.append(req)
+        return req.uid
+
+    def _uid(self, uid: Optional[str]) -> str:
+        if uid is not None:
+            return uid
+        self._next_uid += 1
+        return f"req-{self._next_uid}"
+
+    def submit_compress(
+        self,
+        x: np.ndarray,
+        cfg: FFCzConfig,
+        uid: Optional[str] = None,
+        deadline_s: Optional[float] = None,
+    ) -> str:
+        """Queue one whole-field compression (the paper pipeline)."""
+        x = np.asarray(x)
+        if x.size == 0:
+            raise ValueError("cannot compress an empty field")
+        return self._admit(
+            _Request(
+                uid=self._uid(uid),
+                kind="field",
+                payload=x,
+                cfg=cfg,
+                deadline_s=self.config.deadline_s if deadline_s is None else deadline_s,
+            )
+        )
+
+    def submit_pencils(
+        self,
+        x: np.ndarray,
+        E_rel: float,
+        Delta_rel: float,
+        uid: Optional[str] = None,
+        deadline_s: Optional[float] = None,
+    ) -> str:
+        """Queue one tensor for blockwise (pencil) compression.
+
+        Queued pencil requests are fused: up to ``max_batch`` of them run as
+        a single batched ``engine.correct`` call, each with its own resolved
+        bounds — heterogeneous shapes and dtypes batch freely because the
+        engine tiles every tensor into ``block``-length pencils.
+        """
+        x = np.asarray(x)
+        if x.size == 0:
+            raise ValueError("cannot compress an empty tensor")
+        if not (E_rel > 0 and Delta_rel > 0):
+            raise ValueError(f"bounds must be positive, got E_rel={E_rel}, Delta_rel={Delta_rel}")
+        return self._admit(
+            _Request(
+                uid=self._uid(uid),
+                kind="pencils",
+                payload=x,
+                cfg=(float(E_rel), float(Delta_rel)),
+                deadline_s=self.config.deadline_s if deadline_s is None else deadline_s,
+            )
+        )
+
+    def submit_decompress(
+        self,
+        blob: bytes,
+        uid: Optional[str] = None,
+        deadline_s: Optional[float] = None,
+    ) -> str:
+        """Queue a decode of service pencil bytes or a whole-field FFCz blob."""
+        return self._admit(
+            _Request(
+                uid=self._uid(uid),
+                kind="decompress",
+                payload=bytes(blob),
+                cfg=None,
+                deadline_s=self.config.deadline_s if deadline_s is None else deadline_s,
+            )
+        )
+
+    # -- scheduling --------------------------------------------------------
+
+    def step(self) -> List[ServiceResponse]:
+        """Retire one unit of work: a pencil bucket (up to ``max_batch``
+        fused requests) or one field/decompress request.
+
+        Always removes the popped requests from the queue — a request never
+        re-enqueues, retries happen bounded *within* the step — so ``step``
+        makes progress whenever the queue is non-empty and :meth:`drain`
+        terminates by induction.
+        """
+        if not self._queue:
+            return []
+        if self._queue[0].kind == "pencils":
+            bucket: List[_Request] = []
+            rest: List[_Request] = []
+            for r in self._queue:
+                if r.kind == "pencils" and len(bucket) < self.config.max_batch:
+                    bucket.append(r)
+                else:
+                    rest.append(r)
+            self._queue = rest
+            return self._run_pencil_bucket(bucket)
+        req = self._queue.pop(0)
+        if req.kind == "field":
+            return [self._run_field(req)]
+        return [self._run_decompress(req)]
+
+    def drain(self) -> Dict[str, ServiceResponse]:
+        """Run :meth:`step` until the queue is empty; responses keyed by uid."""
+        out: Dict[str, ServiceResponse] = {}
+        while self._queue:
+            for resp in self.step():
+                out[resp.uid] = resp
+        return out
+
+    # -- failure machinery -------------------------------------------------
+
+    def _check_deadline(self, req: _Request) -> None:
+        if req.elapsed(self._clock()) > req.deadline_s:
+            raise DeadlineExceeded(
+                f"request {req.uid} exceeded its {req.deadline_s:g}s deadline",
+                stage="service",
+            )
+
+    def _fire(self, site: str, req: _Request) -> None:
+        if self.injector is not None:
+            self.injector.fire(site, uid=req.uid)
+
+    def _attempt(self, req: _Request, stage: str, fn: Callable[[], Any]) -> Any:
+        """Run ``fn`` with deadline enforcement and bounded transient retries.
+
+        Non-retryable and budget-exhausted errors re-raise classified; each
+        retry backs off exponentially with seeded jitter and records a
+        ``retry:<stage>`` rung.
+        """
+        while True:
+            self._check_deadline(req)
+            try:
+                return fn()
+            except Exception as e:  # noqa: BLE001 - classified immediately below
+                err = classify_exception(e, stage)
+                if not err.retryable or req.attempts >= self.config.max_retries:
+                    raise err from e
+                req.attempts += 1
+                self.counters["retries"] += 1
+                req.rungs.append(f"retry:{stage}")
+                delay = self.config.backoff_base_s * (
+                    self.config.backoff_factor ** (req.attempts - 1)
+                )
+                delay *= 1.0 + self.config.backoff_jitter * float(self._rng.random())
+                self._sleep(delay)
+
+    def _reject(self, req: _Request, err: FFCzError) -> ServiceResponse:
+        self.counters["rejected"] += 1
+        if err.disposition == "timeout":
+            self.counters["timeouts"] += 1
+        return ServiceResponse(
+            uid=req.uid, ok=False, error=err.to_dict(), stats=self._stats(req)
+        )
+
+    def _complete(self, req: _Request, payload: Any) -> ServiceResponse:
+        self.counters["completed"] += 1
+        return ServiceResponse(uid=req.uid, ok=True, payload=payload, stats=self._stats(req))
+
+    def _stats(self, req: _Request) -> RequestStats:
+        return RequestStats(
+            attempts=req.attempts,
+            rungs=tuple(req.rungs),
+            latency_s=req.elapsed(self._clock()),
+            fft_impl=req.fft_impl,
+            converged=req.converged,
+            final_violations=req.final_violations,
+        )
+
+    # -- whole-field path --------------------------------------------------
+
+    def _run_field(self, req: _Request) -> ServiceResponse:
+        try:
+            blob = self._compress_field(req)
+            return self._complete(req, blob.to_bytes())
+        except FFCzError as err:
+            return self._reject(req, err)
+        except Exception as e:  # noqa: BLE001 - terminal safety net
+            return self._reject(req, classify_exception(e, "service"))
+
+    def _compress_field(self, req: _Request) -> FFCzBlob:
+        cfg: FFCzConfig = req.cfg
+        x32 = np.asarray(req.payload, dtype=np.float32)
+        plan = self._attempt(req, "plan", lambda: self.engine.plan_field(x32, cfg))
+
+        def _base():
+            self._fire("codec", req)
+            blob = self.base.compress(x32, plan.E_proj)
+            return blob, np.asarray(self.base.decompress(blob), dtype=np.float32)
+
+        base_blob, x_hat = self._attempt(req, "base", _base)
+        eps0 = x_hat - x32
+
+        result, plan = self._execute_with_ladder(req, eps0, plan)
+        req.converged = bool(result.converged)
+        req.final_violations = int(result.final_violations)
+
+        def _encode():
+            self._fire("codec", req)
+            return self.engine.encode_field(result, plan)
+
+        se, fe = self._attempt(req, "encode", _encode)
+        return FFCzBlob(
+            base_blob=base_blob,
+            spat_edits=se,
+            freq_edits=fe,
+            E=plan.E,
+            Delta_scalar=plan.delta_scalar,
+            pointwise_delta=plan.pointwise_bytes(),
+            shape=plan.shape,
+            crc=cfg.crc,
+        )
+
+    def _execute_with_ladder(self, req: _Request, eps0: np.ndarray, plan):
+        """EXECUTE with the degradation ladder (see module docstring).
+
+        Terminates: the impl chain pallas -> packed -> xla is finite, the
+        relax rung fires at most once, and each attempt's retries are
+        bounded by ``_attempt``.
+        """
+        impl = plan.fft_impl
+        relaxed = False
+        while True:
+            req.fft_impl = impl
+            run_plan = dataclasses.replace(plan, fft_impl=impl)
+
+            def _exec(p=run_plan):
+                self._fire("dispatch", req)
+                self._fire("oom", req)
+                return self.engine.execute_field(eps0, p)
+
+            try:
+                result = self._attempt(req, "execute", _exec)
+            except FFCzError as err:
+                nxt = _LADDER.get(impl)
+                if nxt is None or not err.transient:
+                    raise
+                # transient failure survived the retry budget on this rung:
+                # descend rather than reject
+                impl = nxt
+                self.counters["fallbacks"] += 1
+                req.rungs.append(f"fallback:{impl}")
+                continue
+            if result.converged or relaxed or not self.config.relax_on_nonconvergence:
+                return result, run_plan
+            # Non-convergence rung: one re-run with a bigger budget and
+            # over-relaxed projections.  The pallas kernels require
+            # relax == 1.0, so that rung implies the packed transform.
+            relaxed = True
+            self.counters["relaxes"] += 1
+            req.rungs.append("relax")
+            if impl == "pallas":
+                impl = "packed"
+                self.counters["fallbacks"] += 1
+                req.rungs.append(f"fallback:{impl}")
+            plan = dataclasses.replace(
+                plan,
+                max_iters=plan.max_iters * self.config.relax_iters_mult,
+                relax=self.config.relax_factor,
+            )
+
+    # -- pencil bucket path ------------------------------------------------
+
+    def _run_pencil_bucket(self, bucket: List[_Request]) -> List[ServiceResponse]:
+        """Per-request plan/base, ONE fused correction, per-request encode."""
+        responses: Dict[str, ServiceResponse] = {}
+        work: List[Tuple[_Request, bytes, np.ndarray, np.ndarray, Any]] = []
+        for req in bucket:
+            try:
+                E_rel, Delta_rel = req.cfg
+                x32 = np.asarray(req.payload, dtype=np.float32)
+                plan = self._attempt(
+                    req,
+                    "plan",
+                    lambda x=x32, e=E_rel, d=Delta_rel: self.engine.plan_pencils(
+                        x, E_rel=e, Delta_rel=d, block=self.config.block
+                    ),
+                )
+                if plan is None:
+                    raise InfeasibleBound(
+                        f"E_rel={E_rel:g} underflows float32 for this tensor's range",
+                        stage="plan",
+                    )
+
+                def _base(x=x32, p=plan, r=req):
+                    self._fire("codec", r)
+                    blob = self.base.compress(x, p.E_proj)
+                    return blob, np.asarray(self.base.decompress(blob), dtype=np.float32)
+
+                base_blob, x_hat = self._attempt(req, "base", _base)
+                eps0 = x_hat - x32
+                tiles0 = self.engine.tile_f64(eps0, self.config.block)
+                work.append((req, base_blob, eps0, tiles0, plan))
+            except FFCzError as err:
+                responses[req.uid] = self._reject(req, err)
+            except Exception as e:  # noqa: BLE001
+                responses[req.uid] = self._reject(req, classify_exception(e, "plan"))
+
+        for resp in self._execute_bucket(work):
+            responses[resp.uid] = resp
+        # preserve submission order in the returned list
+        return [responses[r.uid] for r in bucket]
+
+    def _execute_bucket(self, work: List[Tuple]) -> List[ServiceResponse]:
+        """One fused correction; bisect on allocation failure.
+
+        Recursion depth is log2(len(work)); a single-request OOM rejects, so
+        the recursion always terminates with every request retired.
+        """
+        if not work:
+            return []
+
+        def _correct():
+            # one fused device call per bucket -> one dispatch/OOM draw
+            self._fire("dispatch", work[0][0])
+            self._fire("oom", work[0][0])
+            return self.engine.correct(
+                [w[2] for w in work],
+                [w[4].E_proj for w in work],
+                [w[4].Delta_proj for w in work],
+                block=self.config.block,
+                max_iters=self.config.max_iters,
+                return_edits=True,
+                return_corrected=False,
+            )
+
+        # retry budget for the fused call is carried by the bucket's first
+        # request; a transient mid-bucket failure re-runs the whole bucket
+        lead = work[0][0]
+        try:
+            _corr, edits, stats = self._attempt(lead, "execute", _correct)
+        except ResourceExhausted as err:
+            if len(work) == 1:
+                return [self._reject(work[0][0], err)]
+            self.counters["bisects"] += 1
+            for req, *_ in work:
+                req.rungs.append("bisect")
+            mid = len(work) // 2
+            return self._execute_bucket(work[:mid]) + self._execute_bucket(work[mid:])
+        except FFCzError as err:
+            # non-OOM terminal failure: every request in the bucket rejects
+            # with the same classified error
+            return [self._reject(req, err) for req, *_ in work]
+
+        conv = np.asarray(stats.converged)
+        out = []
+        for j, ((req, base_blob, _eps0, tiles0, plan), (spat_t, freq_t)) in enumerate(
+            zip(work, edits)
+        ):
+            req.converged = bool(conv[j]) if conv.size else True
+            try:
+
+                def _encode(s=spat_t, f=freq_t, t=tiles0, p=plan, r=req):
+                    self._fire("codec", r)
+                    return self.engine.encode_pencils(s, f, t, p, codec="zlib")
+
+                se, fe = self._attempt(req, "encode", _encode)
+                x = np.asarray(req.payload)
+                payload = _pencil_blob(x.shape, base_blob, se, fe, plan, self.config.block)
+                out.append(self._complete(req, payload))
+            except FFCzError as err:
+                out.append(self._reject(req, err))
+            except Exception as e:  # noqa: BLE001
+                out.append(self._reject(req, classify_exception(e, "encode")))
+        return out
+
+    # -- decode path -------------------------------------------------------
+
+    def _run_decompress(self, req: _Request) -> ServiceResponse:
+        try:
+            self._check_deadline(req)
+            data: bytes = req.payload
+            if data[:4] == _PENCIL_MAGIC:
+                return self._complete(req, decode_pencil_blob(data, self.base))
+            # decode consumes no bound config — the blob carries its bounds
+            ffcz = FFCz(self.base, FFCzConfig(), engine=self.engine)
+            return self._complete(req, ffcz.decompress(FFCzBlob.from_bytes(data)))
+        except FFCzError as err:
+            return self._reject(req, err)
+        except Exception as e:  # noqa: BLE001
+            return self._reject(req, classify_exception(e, "decode"))
+
+
+# -- pencil wire format ----------------------------------------------------
+
+
+def _pencil_blob(shape, base_blob: bytes, se, fe, plan, block: int) -> bytes:
+    se_b, fe_b = se.to_bytes(), fe.to_bytes()
+    out = _PENCIL_MAGIC + struct.pack("<B", _PENCIL_VERSION)
+    out += struct.pack(_PENCIL_HEADER, plan.E, plan.Delta, block, len(shape))
+    out += struct.pack(f"<{len(shape)}Q", *shape)
+    out += struct.pack("<QQQ", len(base_blob), len(se_b), len(fe_b))
+    out += base_blob + se_b + fe_b
+    return out + struct.pack("<I", zlib.crc32(out))
+
+
+def decode_pencil_blob(data: bytes, base: Any) -> np.ndarray:
+    """Hardened decode of the service pencil envelope (``FFSB``).
+
+    Every malformation — bad magic/version, truncation, section overrun,
+    CRC mismatch, codec garbage — raises :class:`BlobCorruptError`.
+    """
+    try:
+        if data[:4] != _PENCIL_MAGIC:
+            raise BlobCorruptError("not an FFCz service pencil blob: bad magic")
+        if len(data) < 9 or data[4] != _PENCIL_VERSION:
+            raise BlobCorruptError(
+                f"unsupported service pencil blob version {data[4] if len(data) > 4 else '?'}"
+            )
+        if len(data) < 4 + 1 + 4:
+            raise BlobCorruptError("truncated service pencil blob")
+        body, (crc,) = data[:-4], struct.unpack_from("<I", data, len(data) - 4)
+        if zlib.crc32(body) != crc:
+            raise BlobCorruptError("corrupt service pencil blob: CRC mismatch")
+        off = 5
+        E, Delta, block, ndim = struct.unpack_from(_PENCIL_HEADER, body, off)
+        off += struct.calcsize(_PENCIL_HEADER)
+        if ndim > 16:
+            raise BlobCorruptError(f"corrupt service pencil blob: implausible rank {ndim}")
+        shape = struct.unpack_from(f"<{ndim}Q", body, off)
+        off += 8 * ndim
+        nb, ns, nf = struct.unpack_from("<QQQ", body, off)
+        off += struct.calcsize("<QQQ")
+        if len(body) != off + nb + ns + nf:
+            raise BlobCorruptError(
+                f"corrupt service pencil blob: {len(body)} bytes, sections want {off + nb + ns + nf}"
+            )
+        base_blob = body[off : off + nb]
+        se = EncodedEdits.from_bytes(body[off + nb : off + nb + ns])
+        fe = EncodedEdits.from_bytes(body[off + nb + ns : off + nb + ns + nf])
+        x_hat = np.asarray(base.decompress(base_blob), dtype=np.float32)
+        spat = decode_edits(se, E)
+        freq = decode_edits(fe, Delta)
+        complete = spat + np.fft.irfft(freq, n=block, axis=-1)
+        size = int(np.prod(shape)) if shape else 1
+        x = x_hat.astype(np.float64).reshape(-1) + complete.reshape(-1)[:size]
+        return x.reshape(shape).astype(np.float32)
+    except FFCzError:
+        raise
+    except Exception as e:  # noqa: BLE001 - untrusted bytes
+        raise BlobCorruptError(
+            f"corrupt service pencil blob: {type(e).__name__}: {e}", cause=e
+        ) from e

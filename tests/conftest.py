@@ -25,6 +25,15 @@ except ModuleNotFoundError:
     pass
 
 
+def pytest_configure(config):
+    # The chaos suite tags itself with @pytest.mark.timeout (a no-hang bound
+    # enforced when pytest-timeout is installed, e.g. in CI).  Register the
+    # marker so environments without the plugin run warning-free.
+    config.addinivalue_line(
+        "markers", "timeout(seconds): per-test wall-clock bound (pytest-timeout)"
+    )
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,72 @@
+"""Elastic re-planning: mesh factorization edge cases and pod-loss math."""
+
+import numpy as np
+import pytest
+
+from repro.runtime.elastic import plan_mesh_shape, replan_mesh, survivors_after_pod_loss
+
+
+class TestPlanMeshShape:
+    def test_single_device(self):
+        shape, axes = plan_mesh_shape(1)
+        assert shape == (1, 1)
+        assert axes == ("data", "model")
+
+    @pytest.mark.parametrize("n", [2, 3, 5, 7, 11, 13, 127])
+    def test_prime_counts_fall_back_to_pure_dp_or_full_tp(self, n):
+        """A prime device count only factors as 1 x n or n x 1: the model
+        degree is either n itself (if <= preferred) or collapses to 1."""
+        (dp, mp), _ = plan_mesh_shape(n, preferred_model=16)
+        assert dp * mp == n
+        assert mp == (n if n <= 16 else 1)
+
+    def test_preferred_larger_than_devices_clamps(self):
+        (dp, mp), _ = plan_mesh_shape(8, preferred_model=64)
+        assert (dp, mp) == (1, 8)
+
+    def test_preferred_respected_when_divisible(self):
+        (dp, mp), _ = plan_mesh_shape(64, preferred_model=16)
+        assert (dp, mp) == (4, 16)
+
+    def test_nondivisible_preferred_steps_down(self):
+        # 24 % 16 != 0; the largest divisor <= 16 is 12
+        (dp, mp), _ = plan_mesh_shape(24, preferred_model=16)
+        assert (dp, mp) == (2, 12)
+
+    @pytest.mark.parametrize("n", range(1, 65))
+    @pytest.mark.parametrize("preferred", [1, 2, 16])
+    def test_factorization_property(self, n, preferred):
+        """mp * dp == n, mp <= preferred, and mp is the LARGEST such divisor."""
+        (dp, mp), _ = plan_mesh_shape(n, preferred_model=preferred)
+        assert dp * mp == n
+        assert 1 <= mp <= preferred
+        larger = [m for m in range(mp + 1, preferred + 1) if n % m == 0]
+        assert not larger, f"planner picked mp={mp}, but {larger} also divide {n}"
+
+    def test_replan_mesh_smoke(self):
+        mesh = replan_mesh(1, preferred_model=4)
+        assert mesh.devices.size == 1
+        assert mesh.axis_names == ("data", "model")
+
+
+class TestSurvivorsAfterPodLoss:
+    def test_default_halves(self):
+        assert survivors_after_pod_loss() == 256
+
+    def test_no_loss_keeps_all(self):
+        assert survivors_after_pod_loss(512, 4, 0) == 512
+
+    def test_all_pods_lost(self):
+        assert survivors_after_pod_loss(512, 4, 4) == 0
+
+    @pytest.mark.parametrize("total,pods", [(512, 2), (512, 4), (96, 3), (8, 8)])
+    def test_survivor_property(self, total, pods):
+        """Survivors decrease linearly by total/pods per lost pod, stay
+        non-negative, and always yield a plannable mesh factorization."""
+        sizes = [survivors_after_pod_loss(total, pods, lost) for lost in range(pods + 1)]
+        assert sizes[0] == total and sizes[-1] == 0
+        steps = np.diff(sizes)
+        assert np.all(steps == -(total // pods))
+        for n in sizes[:-1]:
+            (dp, mp), _ = plan_mesh_shape(n)
+            assert dp * mp == n

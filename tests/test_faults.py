@@ -1,0 +1,317 @@
+"""Chaos suite: the FFCz service under deterministic fault injection.
+
+The drain contract under test: every submitted request retires as exactly one
+of completed-within-bounds or rejected-with-structured-reason — the service
+never hangs (each step retires >= 1 request; CI additionally wraps this file
+in a wall-clock timeout) and never lets a raw exception escape.
+
+All randomness flows from FFCZ_FAULT_SEED (env, default fixed) so a CI
+failure replays locally bit-for-bit.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.compressors import get_compressor
+from repro.core.engine import CorrectionEngine
+from repro.core.errors import BlobCorruptError, FFCzError
+from repro.core.ffcz import FFCz, FFCzBlob, FFCzConfig
+from repro.runtime.faults import FaultConfig, FaultInjector
+from repro.serving.ffcz_service import FFCzService, ServiceConfig, decode_pencil_blob
+
+SEED = int(os.environ.get("FFCZ_FAULT_SEED", "20260809"))
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+pytestmark = pytest.mark.timeout(60)
+
+
+def _service(injector=None, **cfg_kw):
+    defaults = dict(max_batch=4, block=64, deadline_s=30.0, seed=SEED)
+    defaults.update(cfg_kw)
+    return FFCzService(
+        get_compressor("szlike"), config=ServiceConfig(**defaults), injector=injector
+    )
+
+
+def _field_cfg(**kw):
+    defaults = dict(E_rel=1e-3, Delta_rel=1e-3, max_iters=300, verify=False)
+    defaults.update(kw)
+    return FFCzConfig(**defaults)
+
+
+def _mixed_workload(svc, rng, n_fields=3, n_pencils=6):
+    uids = []
+    for _ in range(n_fields):
+        x = rng.standard_normal((12, 12)).astype(np.float32)
+        uids.append(svc.submit_compress(x, _field_cfg()))
+    for _ in range(n_pencils):
+        size = int(rng.integers(40, 300))
+        uids.append(svc.submit_pencils(rng.standard_normal(size).astype(np.float32), 1e-3, 1e-3))
+    return uids
+
+
+class TestChaosDrain:
+    def test_drains_under_all_fault_sites(self):
+        """Mixed faults at every site: the queue still fully drains, each
+        request completing or rejecting with a structured reason."""
+        inj = FaultInjector(
+            FaultConfig(
+                p_codec=0.4, p_dispatch=0.4, p_oom=0.4, p_slow=0.2, slow_s=120.0, max_per_site=2
+            ),
+            seed=SEED,
+        )
+        svc = _service(inj, deadline_s=20.0)
+        rng = np.random.default_rng(SEED)
+        uids = _mixed_workload(svc, rng)
+        # plus decode work, some of it deliberately corrupt
+        blob = FFCz(get_compressor("szlike"), _field_cfg()).compress(
+            rng.standard_normal((10, 10)).astype(np.float32)
+        ).to_bytes()
+        uids.append(svc.submit_decompress(blob))
+        uids.append(svc.submit_decompress(inj.flip_bit(blob)))
+        uids.append(svc.submit_decompress(inj.truncate(blob)))
+        uids.append(svc.submit_decompress(b"\x00garbage"))
+
+        responses = svc.drain()
+        assert not svc._queue, "drain left requests behind"
+        assert set(responses) == set(uids), "a request vanished without a response"
+        for uid in uids:
+            r = responses[uid]
+            if r.ok:
+                assert r.payload is not None
+            else:
+                # structured rejection: full taxonomy fields, no raw traceback
+                assert r.error["type"] and r.error["disposition"] in (
+                    "retry", "bisect", "reject", "timeout",
+                ), r.error
+            assert r.stats is not None
+        assert svc.counters["completed"] + svc.counters["rejected"] == len(uids)
+
+    def test_chaos_is_deterministic(self):
+        """Same seed -> identical outcomes, rung sequences, and error types."""
+
+        def run():
+            inj = FaultInjector(
+                FaultConfig(p_codec=0.5, p_dispatch=0.5, p_oom=0.5, max_per_site=2), seed=SEED
+            )
+            svc = _service(inj)
+            rng = np.random.default_rng(SEED)
+            uids = _mixed_workload(svc, rng, n_fields=2, n_pencils=4)
+            res = svc.drain()
+            return [
+                (u, res[u].ok, res[u].stats.rungs, None if res[u].ok else res[u].error["type"])
+                for u in uids
+            ]
+
+        assert run() == run()
+
+
+class TestDegradationLadder:
+    def test_oom_bisects_bucket(self):
+        """Guaranteed allocation failure on the fused call splits the bucket;
+        the halves (post fire-cap) complete."""
+        inj = FaultInjector(FaultConfig(p_oom=1.0, max_per_site=1), seed=SEED)
+        svc = _service(inj)
+        rng = np.random.default_rng(SEED)
+        uids = [
+            svc.submit_pencils(rng.standard_normal(150).astype(np.float32), 1e-3, 1e-3)
+            for _ in range(4)
+        ]
+        res = svc.drain()
+        assert all(res[u].ok for u in uids)
+        assert all("bisect" in res[u].stats.rungs for u in uids)
+        assert svc.counters["bisects"] >= 1
+
+    def test_single_request_oom_rejects_structured(self):
+        """A bucket of one cannot bisect: structured ResourceExhausted."""
+        inj = FaultInjector(FaultConfig(p_oom=1.0, max_per_site=100), seed=SEED)
+        svc = _service(inj)
+        rng = np.random.default_rng(SEED)
+        u = svc.submit_pencils(rng.standard_normal(100).astype(np.float32), 1e-3, 1e-3)
+        r = svc.drain()[u]
+        assert not r.ok
+        assert r.error["type"] == "ResourceExhausted"
+        assert r.error["disposition"] == "bisect"
+
+    def test_fft_impl_ladder_descends_to_xla(self):
+        """A transform that keeps failing walks pallas -> packed -> xla."""
+
+        class FlakyTransformEngine(CorrectionEngine):
+            def execute_field(self, eps0, plan):
+                if plan.fft_impl != "xla":
+                    raise RuntimeError(f"injected transform failure ({plan.fft_impl})")
+                return super().execute_field(eps0, plan)
+
+        svc = FFCzService(
+            get_compressor("szlike"),
+            engine=FlakyTransformEngine(backend="local"),
+            config=ServiceConfig(block=64, max_retries=0, seed=SEED),
+        )
+        rng = np.random.default_rng(SEED)
+        u = svc.submit_compress(
+            rng.standard_normal((12, 12)).astype(np.float32), _field_cfg(fft_impl="pallas")
+        )
+        r = svc.drain()[u]
+        assert r.ok, r.error
+        assert r.stats.fft_impl == "xla"
+        assert ("fallback:packed", "fallback:xla") == tuple(
+            g for g in r.stats.rungs if g.startswith("fallback")
+        )
+
+    def test_nonconvergence_takes_relax_rung(self):
+        """POCS budget exhaustion triggers the relaxed re-run and the final
+        converged flag + violation count surface in the response stats."""
+        svc = _service()
+        rng = np.random.default_rng(SEED)
+        x = rng.standard_normal((16, 16)).astype(np.float32).cumsum(axis=0)
+        u = svc.submit_compress(x, _field_cfg(Delta_rel=1e-7, max_iters=1))
+        r = svc.drain()[u]
+        assert r.ok, r.error
+        assert "relax" in r.stats.rungs
+        assert r.stats.converged is not None
+        if not r.stats.converged:
+            assert r.stats.final_violations > 0
+
+    def test_transient_codec_fault_retries_to_success(self):
+        inj = FaultInjector(FaultConfig(p_codec=1.0, max_per_site=2), seed=SEED)
+        svc = _service(inj)
+        rng = np.random.default_rng(SEED)
+        u = svc.submit_compress(rng.standard_normal((10, 10)).astype(np.float32), _field_cfg())
+        r = svc.drain()[u]
+        assert r.ok, r.error
+        assert any(g.startswith("retry:") for g in r.stats.rungs)
+        assert r.stats.attempts >= 1
+
+
+class TestRejections:
+    def test_infeasible_bound_rejects_structured(self):
+        """A constant field has zero range: E_rel resolves to an E below
+        float32 representability — a request property, rejected not crashed."""
+        svc = _service()
+        u = svc.submit_compress(np.zeros((8, 8), np.float32), _field_cfg())
+        r = svc.drain()[u]
+        assert not r.ok
+        assert r.error["type"] == "InfeasibleBound"
+        assert r.error["stage"] == "plan"
+        assert r.error["disposition"] == "reject"
+
+    def test_slow_request_exceeds_deadline(self):
+        """Injected slowness is charged against the deadline clock: the
+        request times out structurally without the test actually sleeping."""
+        inj = FaultInjector(FaultConfig(p_slow=1.0, slow_s=999.0, max_per_site=1), seed=SEED)
+        svc = _service(inj, deadline_s=1.0)
+        rng = np.random.default_rng(SEED)
+        u = svc.submit_compress(rng.standard_normal((10, 10)).astype(np.float32), _field_cfg())
+        r = svc.drain()[u]
+        assert not r.ok
+        assert r.error["type"] == "DeadlineExceeded"
+        assert r.error["disposition"] == "timeout"
+        assert svc.counters["timeouts"] == 1
+
+    def test_admission_validation(self):
+        svc = _service()
+        with pytest.raises(ValueError, match="empty"):
+            svc.submit_compress(np.zeros((0, 4), np.float32), _field_cfg())
+        with pytest.raises(ValueError, match="positive"):
+            svc.submit_pencils(np.ones(8, np.float32), -1e-3, 1e-3)
+
+
+class TestBlobDecodeHardening:
+    """Satellite (a): every malformed input to blob decode raises the
+    structured BlobCorruptError (a ValueError subclass), never a raw
+    struct/zlib/index crash — fuzzed over the golden fixtures in tests/data."""
+
+    FIXTURES = ["legacy_blob_v0.bin", "padfree_v1_blob.bin", "uneven_v1_blob.bin"]
+
+    def _load(self, name):
+        with open(os.path.join(DATA, name), "rb") as f:
+            return f.read()
+
+    @pytest.mark.parametrize("name", FIXTURES)
+    def test_truncations_never_crash(self, name):
+        raw = self._load(name)
+        rng = np.random.default_rng(SEED)
+        cuts = set(rng.integers(0, len(raw), 60).tolist()) | {0, 1, 4, 5, len(raw) - 1}
+        for keep in cuts:
+            try:
+                FFCzBlob.from_bytes(raw[:keep])
+            except BlobCorruptError:
+                pass  # the only acceptable failure mode
+
+    @pytest.mark.parametrize("name", FIXTURES)
+    def test_bit_flips_never_crash(self, name):
+        """A flip may decode to different values (that is what CRC mode is
+        for) but must never raise anything outside the taxonomy."""
+        raw = self._load(name)
+        base = get_compressor("szlike")
+        ffcz = FFCz(base, FFCzConfig())
+        inj = FaultInjector(seed=SEED)
+        for _ in range(40):
+            flipped = inj.flip_bit(raw)
+            try:
+                ffcz.decompress(FFCzBlob.from_bytes(flipped))
+            except FFCzError:
+                pass
+
+    def test_garbage_rejected(self):
+        for junk in [b"", b"\x00", b"FFCZ", os.urandom(64), b"A" * 1000]:
+            with pytest.raises((BlobCorruptError, ValueError)):
+                FFCzBlob.from_bytes(junk)
+
+    def test_legacy_fixtures_still_decode(self):
+        """Hardening must not reject a single valid legacy byte stream, and
+        re-encoding a current-version fixture stays byte-identical."""
+        base = get_compressor("szlike")
+        for name in self.FIXTURES:
+            raw = self._load(name)
+            blob = FFCzBlob.from_bytes(raw)
+            out = FFCz(base, FFCzConfig()).decompress(blob)
+            out_name = name.replace("_blob.bin", "_output.npy").replace(".bin", "_output.npy")
+            golden = np.load(os.path.join(DATA, out_name))
+            assert np.array_equal(out, golden)
+            if name != "legacy_blob_v0.bin":  # v0 re-encodes as v1 (magic added)
+                assert blob.to_bytes() == raw
+
+    def test_pencil_blob_corruption(self, rng):
+        svc = _service()
+        u = svc.submit_pencils(rng.standard_normal(200).astype(np.float32), 1e-3, 1e-3)
+        payload = svc.drain()[u].payload
+        base = get_compressor("szlike")
+        assert decode_pencil_blob(payload, base).shape == (200,)
+        inj = FaultInjector(seed=SEED)
+        for _ in range(30):
+            with pytest.raises(BlobCorruptError):
+                corrupted = inj.flip_bit(payload)
+                if corrupted == payload:  # pragma: no cover - rng cannot return equal
+                    continue
+                decode_pencil_blob(corrupted, base)
+        for keep in [0, 5, len(payload) // 2, len(payload) - 1]:
+            with pytest.raises(BlobCorruptError):
+                decode_pencil_blob(payload[:keep], base)
+
+
+class TestCrcTail:
+    def test_crc_roundtrip_and_parity(self, rng):
+        x = rng.standard_normal((16, 16)).astype(np.float32)
+        plain = FFCz(get_compressor("szlike"), _field_cfg())
+        withcrc = FFCz(get_compressor("szlike"), _field_cfg(crc=True))
+        b0, b1 = plain.compress(x), withcrc.compress(x)
+        raw0, raw1 = b0.to_bytes(), b1.to_bytes()
+        assert raw1.startswith(raw0) and len(raw1) > len(raw0)
+        # the CRC tail is excluded from the cross-backend parity unit
+        assert b1.payload_bytes() == raw0
+        blob = FFCzBlob.from_bytes(raw1)
+        assert blob.crc and blob.to_bytes() == raw1  # decode -> re-encode stable
+        assert np.array_equal(withcrc.decompress(blob), plain.decompress(b0))
+
+    def test_crc_catches_every_sampled_bit_flip(self, rng):
+        """Without CRC a flip can silently change decoded values; with the
+        tail, every sampled single-bit flip is detected at parse time."""
+        x = rng.standard_normal((12, 12)).astype(np.float32)
+        raw = FFCz(get_compressor("szlike"), _field_cfg(crc=True)).compress(x).to_bytes()
+        inj = FaultInjector(seed=SEED)
+        for _ in range(80):
+            with pytest.raises((BlobCorruptError, ValueError)):
+                FFCzBlob.from_bytes(inj.flip_bit(raw))

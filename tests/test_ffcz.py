@@ -99,3 +99,25 @@ class TestConfigValidation:
         _, blob = c.roundtrip(nyx)
         assert blob.stats.iterations == 1  # converges at the first check
         assert blob.stats.n_active_spatial == 0
+
+
+class TestNonConvergenceSurfacing:
+    def test_too_tight_bound_pair_reports_violations(self, rng):
+        """A starved POCS budget on a too-tight frequency bound must not fail
+        silently: stats carry converged=False plus the pair-weighted count of
+        components still outside the shrunk f-cube after the polish."""
+        x = rng.standard_normal((24, 24)).astype(np.float32).cumsum(axis=0)
+        c = FFCz(get_compressor("szlike"), FFCzConfig(E_rel=1e-3, Delta_rel=1e-7, max_iters=1))
+        _, blob = c.roundtrip(x)
+        st = blob.stats
+        assert st.converged is False
+        assert st.final_violations > 0
+        # the spatial bound still holds by construction (final state is
+        # inside the s-cube); only the frequency bound is violated
+        assert st.spatial_margin >= 0
+
+    def test_converged_run_reports_zero_violations(self, nyx):
+        c = FFCz(get_compressor("szlike"), FFCzConfig(E_rel=1e-3, Delta_rel=1e-3, max_iters=1000))
+        _, blob = c.roundtrip(nyx)
+        assert blob.stats.converged is True
+        assert blob.stats.final_violations == 0

@@ -30,6 +30,30 @@ class TestEngine:
         assert len(eng.step()) == 2
         assert len(eng.queue) == 3
 
+    def test_submit_rejects_invalid_requests(self):
+        """Regression: an empty prompt used to be admitted and crash
+        _make_batch's max() several steps later, inside a batch shared with
+        valid requests; out-of-vocab ids would index garbage embeddings."""
+        cfg = get_smoke_config("qwen2-0.5b")
+        eng = ServingEngine(cfg, ServeConfig(max_batch=2))
+        with pytest.raises(ValueError, match="non-empty"):
+            eng.submit(np.array([], dtype=np.int32))
+        with pytest.raises(ValueError, match="non-empty"):
+            eng.submit(np.zeros((2, 3), dtype=np.int32))  # wrong rank
+        with pytest.raises(ValueError, match="vocab|range"):
+            eng.submit(np.array([0, cfg.vocab], dtype=np.int32))
+        with pytest.raises(ValueError, match="vocab|range"):
+            eng.submit(np.array([-1, 0], dtype=np.int32))
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit(np.arange(4), max_new_tokens=0)
+        with pytest.raises(ValueError, match="max_len"):
+            eng.submit(np.zeros(eng.serve.max_len + 1, dtype=np.int32))
+        # nothing invalid was queued; a valid mixed batch still serves
+        assert not eng.queue
+        uid = eng.submit(np.arange(4), max_new_tokens=2)
+        res = eng.step()
+        assert [r["uid"] for r in res] == [uid]
+
     def test_greedy_determinism(self):
         cfg = get_smoke_config("qwen2-0.5b")
         eng = ServingEngine(cfg, ServeConfig(max_batch=1))
