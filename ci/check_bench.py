@@ -1,14 +1,15 @@
 """Bench regression guard: case-kind coverage + minimum-speedup thresholds.
 
-``benchmarks/bench_pocs.py`` is the anchor for the perf claims in ROADMAP;
-this check gates it two ways:
+``benchmarks/bench_pocs.py`` (POCS kernels) and ``benchmarks/bench_serve.py``
+(pipelined serving) anchor the perf claims in ROADMAP; this check gates them
+two ways:
 
-1. **Coverage** — smoke-runs the benchmark in ``--quick`` mode (small
-   shapes, few repeats — a correctness run, not a measurement) into a
-   scratch file and fails if any emitted ``(bench, path)`` case kind is
-   missing from the checked-in BENCH_pocs.json, or if a recorded kind is no
-   longer emitted (a silently dead case / failed subprocess leg).
-   Shapes/sizes are not compared: quick mode deliberately shrinks them.
+1. **Coverage** — smoke-runs both benchmarks in ``--quick`` mode (small
+   shapes, few repeats — a correctness run, not a measurement) into scratch
+   files and fails if any emitted ``(bench, path)`` case kind is missing
+   from the checked-in BENCH_pocs.json, or if a recorded kind is no longer
+   emitted (a silently dead case / failed subprocess leg).  Shapes/sizes
+   are not compared: quick mode deliberately shrinks them.
 
 2. **Thresholds** — the COMMITTED BENCH_pocs.json (the measured full run,
    not the quick smoke) must meet the per-case-kind minimum speedups in
@@ -60,6 +61,20 @@ THRESHOLDS = {
     ("engine_field", "engine-device"): [("speedup_engine_vs_host", 1.05, None)],
     ("batched", "correct_batch"): [("speedup_batched_vs_loop", 0.85, None)],
 }
+
+# serve/pipelined-vs-serial (benchmarks/bench_serve.py): the ISSUE 7
+# acceptance floor — pipelined step() must sustain >= 1.3x serial throughput
+# at saturating load.  Overlapping host ENCODE with device EXECUTE needs a
+# second core to run the encode worker on; a single-core host serializes the
+# threads by construction and cannot exceed ~1.0x, so rows recorded there
+# carry a sanity floor instead: pipelining must not COST more than 15%.
+# The row's own cpu_count field (stamped by the bench at measurement time)
+# picks the bar, so a record refreshed on a 1-core container and checked on
+# a many-core runner still gets the bar its measurement could meet.
+SERVE_KIND = ("serve", "pipelined-vs-serial")
+SERVE_FIELD = "speedup_pipelined_vs_serial"
+SERVE_FLOOR_MULTICORE = 1.3
+SERVE_FLOOR_SINGLECORE = 0.85
 
 
 def case_kinds(rows) -> set:
@@ -122,30 +137,73 @@ def check_thresholds(rows) -> int:
     return rc
 
 
+def check_serve_threshold(rows) -> int:
+    """The cpu_count-gated pipelined-vs-serial floor (see SERVE_* above)."""
+    scale = float(os.environ.get("FFCZ_BENCH_MIN_SCALE", "1.0"))
+    rc = 0
+    matched = 0
+    for row in rows:
+        if (row.get("bench"), row.get("path")) != SERVE_KIND:
+            continue
+        matched += 1
+        cpus = int(row.get("cpu_count") or 1)
+        floor = (SERVE_FLOOR_MULTICORE if cpus >= 2 else SERVE_FLOOR_SINGLECORE) * scale
+        got = row.get(SERVE_FIELD)
+        where = f"bench=serve path=pipelined-vs-serial shape={row.get('shape')}"
+        if got is None:
+            print(f"MISSING SPEEDUP FIELD: {where} has no {SERVE_FIELD!r}")
+            rc = 1
+            continue
+        if got < floor:
+            kind = "multicore" if cpus >= 2 else "single-core sanity"
+            print(
+                f"SPEEDUP BELOW THRESHOLD: {where}: {SERVE_FIELD}={got:.3f} < "
+                f"{floor:.3f} ({kind} floor, cpu_count={cpus}"
+                + (f", scaled by FFCZ_BENCH_MIN_SCALE={scale}" if scale != 1.0 else "")
+                + ")"
+            )
+            rc = 1
+    if matched == 0:
+        print(
+            "THRESHOLD MATCHED NO ROW: bench=serve path=pipelined-vs-serial — "
+            "the record carries no pipelined-vs-serial measurement (run "
+            "benchmarks/bench_serve.py without --quick)"
+        )
+        rc = 1
+    if rc == 0:
+        print(f"serve threshold OK: {matched} pipelined-vs-serial row(s) meet their floor")
+    return rc
+
+
 def main() -> int:
     with open(RECORDED) as f:
         recorded_rows = json.load(f)["rows"]
     recorded = case_kinds(recorded_rows)
 
     rc = check_thresholds(recorded_rows)
+    rc |= check_serve_threshold(recorded_rows)
 
-    bench = os.path.join(ROOT, "benchmarks", "bench_pocs.py")
+    emitted = set()
     with tempfile.TemporaryDirectory() as tmp:
-        out = os.path.join(tmp, "bench.json")
-        proc = subprocess.run(
-            [sys.executable, bench, "--quick", "--out", out],
-            cwd=ROOT,
-            capture_output=True,
-            text=True,
-            timeout=1800,
-        )
-        print(proc.stdout[-3000:])
-        if proc.returncode != 0:
-            print(f"bench_pocs.py --quick failed (exit {proc.returncode}):")
-            print(proc.stderr[-3000:])
-            return 1
-        with open(out) as f:
-            emitted = case_kinds(json.load(f)["rows"])
+        # both benchmarks smoke-run in --quick mode; coverage below checks
+        # the UNION of their emitted kinds against the committed record
+        for name in ("bench_pocs.py", "bench_serve.py"):
+            bench = os.path.join(ROOT, "benchmarks", name)
+            out = os.path.join(tmp, name + ".json")
+            proc = subprocess.run(
+                [sys.executable, bench, "--quick", "--out", out],
+                cwd=ROOT,
+                capture_output=True,
+                text=True,
+                timeout=1800,
+            )
+            print(proc.stdout[-3000:])
+            if proc.returncode != 0:
+                print(f"{name} --quick failed (exit {proc.returncode}):")
+                print(proc.stderr[-3000:])
+                return 1
+            with open(out) as f:
+                emitted |= case_kinds(json.load(f)["rows"])
 
     if not emitted:
         print("benchmark emitted no rows — smoke run did not measure anything")

@@ -202,6 +202,115 @@ def _correct_batch_core(
     return tuple(corrected), tuple(edits), stats
 
 
+def batch_layout(sizes: Sequence[int], block: int) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Per-tensor (block counts, tail pads) for a packed ``(B, block)`` batch."""
+    counts = tuple(-(-s // block) for s in sizes)
+    pads = tuple((-s) % block for s in sizes)
+    return counts, pads
+
+
+def pack_batch(tensors: Sequence[Any], block: int, out: Optional[np.ndarray] = None):
+    """Stage a heterogeneous batch into ONE host ``(B, block)`` float32 buffer.
+
+    The host-side twin of the packing that :func:`_correct_batch_core` traces
+    on device: each tensor is flattened, cast to float32 (the same IEEE
+    rounding ``tile_1d``'s device cast applies) and zero-padded into
+    ``block``-length rows, all tensors concatenated along the rows axis.
+
+    ``out`` is an optional reusable staging buffer: when its shape matches
+    the batch's ``(B, block)`` layout it is filled in place and returned, so
+    a serving loop retiring same-shaped buckets step after step stops
+    reallocating (and re-faulting) the packed buffer every step — the
+    service keys its staging ring by exactly this shape.
+
+    Returns ``(packed, counts, pads)`` with ``counts[i]`` rows belonging to
+    ``tensors[i]`` and ``pads[i]`` trailing zeros in its last row.
+    """
+    sizes = [int(np.asarray(t).size) for t in tensors]
+    counts, pads = batch_layout(sizes, block)
+    B = sum(counts)
+    if out is None or out.shape != (B, block) or out.dtype != np.float32:
+        out = np.empty((B, block), dtype=np.float32)
+    row = 0
+    for t, nb, pad in zip(tensors, counts, pads):
+        flat = np.asarray(t, dtype=np.float32).reshape(-1)
+        dest = out[row : row + nb].reshape(-1)
+        dest[: flat.size] = flat
+        if pad:
+            dest[flat.size :] = 0.0
+        row += nb
+    return out, counts, pads
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "max_iters", "backend", "mesh", "axis", "fft_impl"),
+    donate_argnums=(0,),
+)
+def _packed_pocs_with_stats(
+    packed, E_arr, D_arr, seg, *, n, max_iters, backend="batched", mesh=None,
+    axis="data", fft_impl="xla",
+):
+    """The vmapped POCS + per-instance stat reductions on a pre-packed buffer.
+
+    The device half of the packed EXECUTE path: packing happens on host
+    (:func:`pack_batch`, reusable staging), this jit runs the exact same
+    ``_pocs_batched`` / ``_pocs_sharded`` program as ``correct_batch`` and
+    the exact same segment reductions, so results are interchangeable with
+    the pack-on-device path.  The packed buffer is DONATED — the device
+    allocation is recycled into the same-shaped edit outputs instead of
+    accumulating a fresh ``(B, block)`` buffer per serving step.
+    """
+    E_blk = E_arr.astype(jnp.float32)[seg]
+    D_blk = D_arr.astype(jnp.float32)[seg]
+    if backend == "sharded":
+        res = _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis, fft_impl)
+    else:
+        res = _pocs_batched(packed, E_blk, D_blk, max_iters, fft_impl)
+    stats = BatchCorrectionStats(
+        iterations=jax.ops.segment_max(res.iterations, seg, num_segments=n),
+        converged=jax.ops.segment_min(res.converged.astype(jnp.int32), seg, num_segments=n) == 1,
+        block_iterations=res.iterations,
+        block_converged=res.converged,
+    )
+    return res, stats
+
+
+def correct_packed(
+    packed: np.ndarray,
+    counts: Sequence[int],
+    E,
+    Delta,
+    max_iters: int = 50,
+    backend: str = "batched",
+    mesh: Optional[Any] = None,
+    axis: str = "data",
+    fft_impl: str = "xla",
+):
+    """Dispatch the packed POCS program; returns ``(res, stats)`` un-fenced.
+
+    ``packed`` is a :func:`pack_batch` staging buffer (or any ``(B, block)``
+    float32 array with ``counts[i]`` rows per instance); ``E``/``Delta`` as
+    in :func:`correct_batch`.  The returned arrays are in-flight device
+    values — callers overlap host work with the device EXECUTE and fence
+    with ``jax.block_until_ready`` when they actually need the bytes.
+    """
+    n = len(counts)
+    seg = jnp.asarray(np.repeat(np.arange(n), counts), dtype=jnp.int32)
+    return _packed_pocs_with_stats(
+        jnp.asarray(packed),
+        _as_bound_array(E, n),
+        _as_bound_array(Delta, n),
+        seg,
+        n=n,
+        max_iters=max_iters,
+        backend=backend,
+        mesh=mesh,
+        axis=axis,
+        fft_impl=fft_impl,
+    )
+
+
 _BATCH_STATICS = (
     "block", "max_iters", "return_edits", "return_corrected", "backend", "mesh", "axis",
     "fft_impl",

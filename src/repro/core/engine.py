@@ -238,6 +238,127 @@ class FieldResult:
 
 
 # ---------------------------------------------------------------------------
+# async EXECUTE handles (pipelined serving, ISSUE 7)
+#
+# JAX dispatch is asynchronous: a jitted call returns in-flight device arrays
+# before the program finishes.  The engine exposes that seam explicitly so a
+# serving loop can overlap batch i's host ENCODE with batch i+1's device
+# EXECUTE: the *_async entry points dispatch and return a handle immediately
+# (classifying dispatch-time failures), and ``handle.result()`` is the
+# ``jax.block_until_ready`` fence plus every host-side completion step (state
+# staging, float64 polish, violation recount) — classified again, because an
+# async device failure surfaces at the fence, possibly on another thread.
+
+
+class FieldExecuteHandle:
+    """One in-flight whole-field EXECUTE; ``result()`` fences and polishes.
+
+    ``result()`` is idempotent (the finalized :class:`FieldResult` — or the
+    classified error — is cached) and may be called from a different thread
+    than the dispatching one: every failure re-raises as the same classified
+    :class:`~repro.core.errors.FFCzError` on every caller.
+    """
+
+    def __init__(self, engine: "CorrectionEngine", raw, eps0, plan: FieldPlan):
+        self._engine = engine
+        self._raw = raw  # AlternatingProjectionResult of in-flight device arrays
+        self._eps0 = eps0  # the ShardedField when sharded, else None
+        self._plan = plan
+        self._value: Optional[FieldResult] = None
+        self._exc: Optional[FFCzError] = None
+
+    def result(self) -> FieldResult:
+        if self._exc is not None:
+            raise self._exc
+        if self._value is None:
+            try:
+                self._value = self._engine._finalize_field(self._raw, self._eps0, self._plan)
+            except FFCzError as err:
+                self._exc = err
+                raise
+            finally:
+                self._raw = None  # drop the device references either way
+        return self._value
+
+
+class PencilBatchHandle:
+    """One in-flight fused pencil EXECUTE over a packed ``(B, block)`` buffer.
+
+    ``result()`` fences the device program and returns the same
+    ``(corrected, edits, stats)`` tuple :meth:`CorrectionEngine.correct`
+    produces, with per-tensor slices of the packed outputs.  Idempotent and
+    thread-agnostic, like :class:`FieldExecuteHandle`.
+    """
+
+    def __init__(self, raw, stats, specs, counts, pads, block, return_edits, return_corrected):
+        self._raw = raw
+        self._stats = stats
+        self._specs = specs  # [(shape, dtype)] per tensor
+        self._counts = counts
+        self._pads = pads
+        self._block = block
+        self._return_edits = return_edits
+        self._return_corrected = return_corrected
+        self._value = None
+        self._exc: Optional[FFCzError] = None
+
+    def result(self):
+        if self._exc is not None:
+            raise self._exc
+        if self._value is None:
+            try:
+                res, stats = jax.block_until_ready((self._raw, self._stats))
+                corrected, edits = [], []
+                offset = 0
+                for (shape, dtype), nb, pad in zip(self._specs, self._counts, self._pads):
+                    sl = slice(offset, offset + nb)
+                    if self._return_corrected:
+                        corrected.append(
+                            blockwise.untile_1d(res.eps[sl], shape, pad).astype(dtype)
+                        )
+                    if self._return_edits:
+                        edits.append((res.spat_edits[sl], res.freq_edits[sl]))
+                    offset += nb
+                if self._return_edits:
+                    self._value = (corrected, edits, stats)
+                else:
+                    self._value = (corrected, stats)
+            except FFCzError as err:
+                self._exc = err
+                raise
+            except (RuntimeError, MemoryError) as e:
+                self._exc = classify_exception(e, "execute")
+                raise self._exc from e
+            finally:
+                self._raw = self._stats = None
+        return self._value
+
+
+class _FenceHandle:
+    """Generic handle over already-structured (but still in-flight) outputs:
+    ``result()`` is just the classified ``block_until_ready`` fence.  Used by
+    the ``local`` backend, whose per-tensor dispatches happen eagerly."""
+
+    def __init__(self, value):
+        self._value = value
+        self._fenced = False
+        self._exc: Optional[FFCzError] = None
+
+    def result(self):
+        if self._exc is not None:
+            raise self._exc
+        if not self._fenced:
+            try:
+                jax.block_until_ready(self._value)
+                self._fenced = True
+            except (RuntimeError, MemoryError) as e:
+                self._exc = classify_exception(e, "execute")
+                self._value = None
+                raise self._exc from e
+        return self._value
+
+
+# ---------------------------------------------------------------------------
 # the engine
 
 
@@ -518,6 +639,21 @@ class CorrectionEngine:
         the single-device program (see :mod:`repro.sharding.dist_fft`), so
         the edit streams — and the blobs built from them — match exactly.
         """
+        return self.execute_field_async(eps0, plan).result()
+
+    def execute_field_async(
+        self, eps0: Union[np.ndarray, ShardedField], plan: FieldPlan
+    ) -> FieldExecuteHandle:
+        """Dispatch the whole-field POCS program; return before the fence.
+
+        The returned :class:`FieldExecuteHandle` owns the in-flight device
+        arrays; ``handle.result()`` runs ``jax.block_until_ready`` plus the
+        host half of :meth:`execute_field` (state staging, float64 polish,
+        violation recount) and may run on a different thread — the pipelined
+        service fences batch *i* on its encode worker while this thread
+        dispatches batch *i+1*.  Dispatch-time device failures classify and
+        raise here; fence-time failures classify inside ``result()``.
+        """
         sharded = isinstance(eps0, ShardedField)
         try:
             if sharded:
@@ -534,6 +670,16 @@ class CorrectionEngine:
                     fft_impl=plan.fft_impl,
                     check_every=plan.check_every,
                 )
+        except (RuntimeError, MemoryError) as e:
+            # device dispatch / allocation failures carry stage + disposition
+            # (OOM -> "bisect") so serving loops can act without string-matching
+            raise classify_exception(e, "execute") from e
+        return FieldExecuteHandle(self, res, eps0 if sharded else None, plan)
+
+    def _finalize_field(self, res, sharded_field, plan: FieldPlan) -> FieldResult:
+        """The fence + host half of EXECUTE (see :meth:`execute_field_async`)."""
+        sharded = sharded_field is not None
+        try:
             # edit state -> host: this is the encode/serialization staging (the
             # single-device path stages identically); the float64 polish is a
             # handful of host FFT round trips on the O(residual) edit state.
@@ -541,14 +687,15 @@ class CorrectionEngine:
             # rows/columns are exactly zero; slicing them away here restores the
             # single-device shapes (and values, bitwise on "bitwise"-parity
             # shapes) before the polish and encode stages.
+            jax.block_until_ready(res)
             spat = np.asarray(res.spat_edits, dtype=np.float64)
             freq = np.asarray(res.freq_edits, dtype=np.complex128)
             eps_f = np.asarray(res.eps, dtype=np.float64)
         except (RuntimeError, MemoryError) as e:
-            # device dispatch / allocation failures carry stage + disposition
-            # (OOM -> "bisect") so serving loops can act without string-matching
+            # an async device failure surfaces at the fence, not at dispatch
             raise classify_exception(e, "execute") from e
         if sharded:
+            eps0 = sharded_field
             spat = eps0.unpad_spatial(spat)
             eps_f = eps0.unpad_spatial(eps_f)
             freq = eps0.unpad_freq(freq)
@@ -662,6 +809,74 @@ class CorrectionEngine:
             )
         except (RuntimeError, MemoryError) as e:
             raise classify_exception(e, "execute") from e
+
+    def correct_async(
+        self,
+        tensors: Sequence[Any],
+        E,
+        Delta,
+        block: int = 4096,
+        max_iters: int = 50,
+        return_edits: bool = False,
+        return_corrected: bool = True,
+        fft_impl: Optional[str] = None,
+        staging: Optional[np.ndarray] = None,
+    ):
+        """Dispatch a pencil-batch correction; return a handle before the fence.
+
+        The async twin of :meth:`correct`: packing happens on host
+        (:func:`repro.core.blockwise.pack_batch` — ``staging`` optionally
+        reuses a caller-cached ``(B, block)`` buffer so steady-state serving
+        buckets stop reallocating it), the packed POCS program is dispatched
+        with the device buffer DONATED, and the returned
+        :class:`PencilBatchHandle`'s ``result()`` fences + slices per tensor,
+        yielding exactly :meth:`correct`'s return structure.  The packed
+        values, the vmapped while_loop and the stat reductions are the same
+        program as :meth:`correct`'s, so results are interchangeable.
+
+        Dispatch-time failures (including allocation failure on the packed
+        buffer) classify and raise here; async failures classify inside
+        ``result()``, which may run on another thread.
+        """
+        fft_impl = self.fft_impl if fft_impl is None else fft_impl
+        if len(tensors) == 0:
+            empty = blockwise.BatchCorrectionStats(
+                iterations=jnp.zeros((0,), jnp.int32),
+                converged=jnp.zeros((0,), bool),
+                block_iterations=jnp.zeros((0,), jnp.int32),
+                block_converged=jnp.zeros((0,), bool),
+            )
+            return _FenceHandle(([], [], empty) if return_edits else ([], empty))
+        if self.backend == "local":
+            # per-tensor dispatches happen eagerly; the handle is just the fence
+            try:
+                return _FenceHandle(
+                    self._correct_local(
+                        tensors, E, Delta, block, max_iters, return_edits,
+                        return_corrected, fft_impl,
+                    )
+                )
+            except (RuntimeError, MemoryError) as e:
+                raise classify_exception(e, "execute") from e
+        specs = [(np.asarray(t).shape, np.asarray(t).dtype) for t in tensors]
+        try:
+            packed, counts, pads = blockwise.pack_batch(tensors, block, out=staging)
+            res, stats = blockwise.correct_packed(
+                packed,
+                counts,
+                E,
+                Delta,
+                max_iters=max_iters,
+                backend=self.backend,
+                mesh=self.mesh if self.backend == "sharded" else None,
+                axis=self.axis,
+                fft_impl=fft_impl,
+            )
+        except (RuntimeError, MemoryError) as e:
+            raise classify_exception(e, "execute") from e
+        return PencilBatchHandle(
+            res, stats, specs, counts, pads, block, return_edits, return_corrected
+        )
 
     def _correct_local(
         self, tensors, E, Delta, block, max_iters, return_edits, return_corrected, fft_impl="xla"

@@ -31,6 +31,7 @@ without string-matching at every call site.
 
 from __future__ import annotations
 
+from concurrent.futures import CancelledError
 from typing import Optional
 
 
@@ -111,6 +112,13 @@ class DeadlineExceeded(PermanentError):
     disposition = "timeout"
 
 
+class PipelineAborted(PermanentError):
+    """The pipelined service tore down (or a stage's future was cancelled)
+    while this request was in flight.  Terminal for the request — the work
+    unit never ran to completion and will not be retried by this service
+    instance — but carries no judgement about the request itself."""
+
+
 _OOM_MARKERS = (
     "RESOURCE_EXHAUSTED",
     "out of memory",
@@ -139,12 +147,22 @@ def classify_exception(exc: BaseException, stage: str) -> FFCzError:
     (``ValueError`` / ``TypeError`` / ``KeyError``) become
     :class:`PermanentError` (reject).  Anything else is conservatively
     permanent: an unknown failure must never spin a retry loop.
+
+    Thread-boundary contract (the pipelined service resolves EXECUTE/ENCODE
+    on a worker thread): an :class:`FFCzError` raised inside a
+    ``concurrent.futures`` future re-raises *as the same object* in the
+    waiting thread, so classification survives the hop — the stage set where
+    the error surfaced is preserved, never overwritten.  A cancelled future
+    (service teardown mid-flight) classifies as :class:`PipelineAborted`
+    rather than escaping as the ``BaseException``-derived ``CancelledError``.
     """
     if isinstance(exc, FFCzError):
         if exc.stage is None:
             exc.stage = stage
         return exc
     msg = f"{type(exc).__name__}: {exc}"
+    if isinstance(exc, CancelledError):
+        return PipelineAborted(msg, stage=stage, cause=exc)
     if is_oom(exc):
         return ResourceExhausted(msg, stage=stage, cause=exc)
     if isinstance(exc, (OSError, EOFError)):

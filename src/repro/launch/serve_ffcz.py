@@ -3,18 +3,29 @@
 Drives :class:`repro.serving.ffcz_service.FFCzService` with a synthetic
 mixed workload (whole-field + pencil compressions + decodes, a fraction of
 them deliberately corrupted) under optional deterministic fault injection,
-then prints the outcome table, latency percentiles, and the service's
-failure-machinery counters.
+then prints the outcome table, latency percentiles, stage timers, and the
+service's failure-machinery counters.
 
     PYTHONPATH=src python -m repro.launch.serve_ffcz --requests 16
     PYTHONPATH=src python -m repro.launch.serve_ffcz --requests 32 \
         --p-codec 0.3 --p-dispatch 0.3 --p-oom 0.5 --p-slow 0.1 --slow-s 120 \
         --corrupt-frac 0.25 --seed 7
+    # serial (un-pipelined) execution for A/B comparison:
+    PYTHONPATH=src python -m repro.launch.serve_ffcz --requests 32 --pipeline-depth 1
+
+The offered-load sweep lives in ``benchmarks/bench_serve.py``, which reuses
+this module's flag groups (service, workload, faults) and adds
+``--arrival-rates`` / ``--requests-per-run`` on top:
+
+    PYTHONPATH=src python benchmarks/bench_serve.py --quick
+    PYTHONPATH=src python benchmarks/bench_serve.py \
+        --arrival-rates 5,20,80 --pencil-frac 0.75 --p-codec 0.1
 """
 
 from __future__ import annotations
 
 import argparse
+from typing import List, Optional
 
 import numpy as np
 
@@ -24,16 +35,23 @@ from repro.runtime.faults import FaultConfig, FaultInjector
 from repro.serving.ffcz_service import FFCzService, ServiceConfig
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--requests", type=int, default=16, help="total requests to generate")
+def add_service_args(ap: argparse.ArgumentParser) -> None:
+    """Service-construction flags (shared with benchmarks/bench_serve.py)."""
     ap.add_argument("--seed", type=int, default=0, help="workload + fault stream seed")
     ap.add_argument("--base", default="szlike", help="base compressor name")
-    ap.add_argument("--field-size", type=int, default=24, help="whole-field edge length")
     ap.add_argument("--max-batch", type=int, default=8, help="pencil requests fused per step")
     ap.add_argument("--block", type=int, default=128, help="pencil length")
     ap.add_argument("--deadline-s", type=float, default=30.0, help="per-request deadline")
     ap.add_argument("--max-retries", type=int, default=3, help="transient retry budget")
+    ap.add_argument(
+        "--pipeline-depth", type=int, default=2,
+        help="in-flight units: 1 = serial, >=2 overlaps host ENCODE with device EXECUTE",
+    )
+
+
+def add_workload_args(ap: argparse.ArgumentParser) -> None:
+    """Synthetic-workload flags (shared with benchmarks/bench_serve.py)."""
+    ap.add_argument("--field-size", type=int, default=24, help="whole-field edge length")
     ap.add_argument("--e-rel", type=float, default=1e-3)
     ap.add_argument("--delta-rel", type=float, default=1e-3)
     ap.add_argument("--crc", action="store_true", help="append CRC tails to field blobs")
@@ -41,29 +59,39 @@ def main():
                     help="fraction of compressions taking the blockwise path")
     ap.add_argument("--corrupt-frac", type=float, default=0.0,
                     help="fraction of decode requests fed corrupted bytes")
-    # fault-injection knobs (all off by default)
+
+
+def add_fault_args(ap: argparse.ArgumentParser) -> None:
+    """Fault-injection flags (all off by default; shared with the bench)."""
     ap.add_argument("--p-codec", type=float, default=0.0, help="host codec fault probability")
     ap.add_argument("--p-dispatch", type=float, default=0.0, help="device dispatch fault probability")
     ap.add_argument("--p-oom", type=float, default=0.0, help="device OOM probability")
     ap.add_argument("--p-slow", type=float, default=0.0, help="slow-request probability")
     ap.add_argument("--slow-s", type=float, default=0.0, help="injected slowness (seconds)")
-    ap.add_argument("--max-per-site", type=int, default=2, help="fire cap per fault site")
-    args = ap.parse_args()
+    ap.add_argument("--max-per-site", type=int, default=2,
+                    help="fire cap per (fault site, request)")
 
-    injector = None
-    if args.p_codec or args.p_dispatch or args.p_oom or args.p_slow:
-        injector = FaultInjector(
-            FaultConfig(
-                p_codec=args.p_codec,
-                p_dispatch=args.p_dispatch,
-                p_oom=args.p_oom,
-                p_slow=args.p_slow,
-                slow_s=args.slow_s,
-                max_per_site=args.max_per_site,
-            ),
-            seed=args.seed,
-        )
-    svc = FFCzService(
+
+def build_injector(args) -> Optional[FaultInjector]:
+    if not (args.p_codec or args.p_dispatch or args.p_oom or args.p_slow):
+        return None
+    return FaultInjector(
+        FaultConfig(
+            p_codec=args.p_codec,
+            p_dispatch=args.p_dispatch,
+            p_oom=args.p_oom,
+            p_slow=args.p_slow,
+            slow_s=args.slow_s,
+            max_per_site=args.max_per_site,
+        ),
+        seed=args.seed,
+    )
+
+
+def build_service(args, pipeline_depth: Optional[int] = None) -> FFCzService:
+    """One service from parsed flags; ``pipeline_depth`` overrides the flag
+    (the bench builds matched serial/pipelined pairs this way)."""
+    return FFCzService(
         get_compressor(args.base),
         config=ServiceConfig(
             max_batch=args.max_batch,
@@ -71,21 +99,45 @@ def main():
             deadline_s=args.deadline_s,
             max_retries=args.max_retries,
             seed=args.seed,
+            pipeline_depth=args.pipeline_depth if pipeline_depth is None else pipeline_depth,
         ),
-        injector=injector,
+        injector=build_injector(args),
     )
-    cfg = FFCzConfig(E_rel=args.e_rel, Delta_rel=args.delta_rel, max_iters=300,
-                     verify=False, crc=args.crc)
 
-    rng = np.random.default_rng(args.seed)
-    n = args.field_size
-    for _ in range(args.requests):
+
+def field_config(args) -> FFCzConfig:
+    return FFCzConfig(E_rel=args.e_rel, Delta_rel=args.delta_rel, max_iters=300,
+                      verify=False, crc=args.crc)
+
+
+def submit_mixed(svc: FFCzService, rng: np.random.Generator, args, n: int) -> List[str]:
+    """Queue ``n`` mixed compression requests drawn from the workload flags."""
+    cfg = field_config(args)
+    edge = args.field_size
+    uids = []
+    for _ in range(n):
         if rng.random() < args.pencil_frac:
             size = int(rng.integers(args.block // 2, 4 * args.block))
-            svc.submit_pencils(rng.standard_normal(size).astype(np.float32),
-                               args.e_rel, args.delta_rel)
+            uids.append(svc.submit_pencils(rng.standard_normal(size).astype(np.float32),
+                                           args.e_rel, args.delta_rel))
         else:
-            svc.submit_compress(rng.standard_normal((n, n)).astype(np.float32), cfg)
+            uids.append(svc.submit_compress(rng.standard_normal((edge, edge)).astype(np.float32),
+                                            cfg))
+    return uids
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=16, help="total requests to generate")
+    add_service_args(ap)
+    add_workload_args(ap)
+    add_fault_args(ap)
+    args = ap.parse_args()
+
+    svc = build_service(args)
+    injector = svc.injector
+    rng = np.random.default_rng(args.seed)
+    submit_mixed(svc, rng, args, args.requests)
     responses = dict(svc.drain())
 
     # feed a sample of the produced blobs back through decode
@@ -95,9 +147,10 @@ def main():
             blob = injector.corrupt_blob(blob) if injector else blob[: len(blob) // 2]
         responses[svc.submit_decompress(blob, uid=f"dec-{i}")] = None
     responses.update(svc.drain())
+    svc.close()
 
     lat = []
-    for uid in sorted(responses, key=lambda u: (len(u), u)):
+    for uid in responses:  # drain() already ordered by submission
         r = responses[uid]
         if r is None:
             continue
@@ -112,6 +165,7 @@ def main():
     p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
     print(f"\n{len(lat)} requests drained  p50={p50 * 1e3:.1f}ms  p99={p99 * 1e3:.1f}ms")
     print("counters:", dict(svc.counters))
+    print("stage timers (s):", {k: round(v, 4) for k, v in svc.timers.items()})
 
 
 if __name__ == "__main__":

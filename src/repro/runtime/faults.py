@@ -2,10 +2,19 @@
 
 The chaos suite (tests/test_faults.py) needs the *same* faults on every run:
 a flaky test that only sometimes exercises the retry ladder proves nothing.
-So every probabilistic decision here flows from one seeded
-``np.random.default_rng`` stream, and the injector draws in a fixed order at
-each site — given the same seed and the same sequence of ``fire`` calls, the
-same faults fire.
+Since the pipelined service (ISSUE 7) runs a request's ENCODE on a worker
+thread while the scheduler thread dispatches the next bucket's EXECUTE, the
+*global* wall-clock order of ``fire`` calls is no longer deterministic — it
+depends on thread interleaving.  What IS deterministic, in serial and
+pipelined mode alike, is the per-request order: a request's plan always
+precedes its base codec call, which precedes its execute attempts, which
+precede its encode attempts.  So every probabilistic decision here flows
+from a *per-request* seeded ``np.random.default_rng`` substream (derived
+from ``(seed, uid)``), and the fire cap is counted per ``(site, uid)``:
+given the same seed and the same per-request sequence of ``fire`` calls,
+the same faults fire — regardless of how requests interleave across
+threads.  That is the property the chaos suite's serial-vs-pipelined
+counter-parity test gates.
 
 Injection sites mirror the real failure surface of the pipeline:
 
@@ -15,22 +24,32 @@ Injection sites mirror the real failure surface of the pipeline:
                 transient -> retried; the service's ladder also descends
                 fft_impl rungs when retries exhaust)
   ``oom``       device allocation failure (message carries the XLA
-                ``RESOURCE_EXHAUSTED`` marker -> batch bisection)
+                ``RESOURCE_EXHAUSTED`` marker -> batch bisection).  Fused
+                pencil buckets fire this site with the ORIGINAL bucket
+                lead's uid through the whole bisect recursion, so the cap
+                applies to the bucket as a unit, not per sub-bucket.
   ``slow``      the request takes ``slow_s`` longer than it should (tests the
                 deadline path; returned as a delay, never an exception)
 
 plus two pure byte-corruption helpers (``flip_bit`` / ``truncate``) for the
-decode-hardening fuzz tests.
+decode-hardening fuzz tests (these draw from a plain shared stream — they
+are test-harness primitives, not service-threaded sites).
 
-``max_per_site`` caps how many times each site fires so an injector with
-``p=1.0`` still lets the work eventually succeed — that is exactly the
-"transient" contract the retry ladder is built for.
+``max_per_site`` caps how many times each site fires *per request* so an
+injector with ``p=1.0`` still lets the work eventually succeed — that is
+exactly the "transient" contract the retry ladder is built for.
+
+All mutable state (per-request streams, fire counts) is guarded by a lock:
+the pipelined service fires sites from both the scheduler thread and the
+encode worker thread.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import threading
+import zlib
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -69,8 +88,9 @@ class FaultConfig:
     p_oom: float = 0.0
     p_slow: float = 0.0
     slow_s: float = 0.0  # extra latency charged to a request when "slow" fires
-    # Per-site fire cap: after this many fires a site goes quiet, so even
-    # p=1.0 faults stay transient and the retry ladder can drain the queue.
+    # Per-(site, request) fire cap: after this many fires a site goes quiet
+    # for that request, so even p=1.0 faults stay transient and the retry
+    # ladder can drain the queue.
     max_per_site: int = 2
 
     def probability(self, site: str) -> float:
@@ -86,48 +106,61 @@ class FaultConfig:
 
 
 class FaultInjector:
-    """Seeded source of faults; ``None`` config or all-zero probabilities
-    makes every call a no-op, so production code paths can call into an
-    always-present injector unconditionally."""
+    """Seeded, thread-safe source of faults; ``None`` config or all-zero
+    probabilities makes every call a no-op, so production code paths can call
+    into an always-present injector unconditionally."""
 
     def __init__(self, config: Optional[FaultConfig] = None, seed: int = 0):
         self.config = config or FaultConfig()
         self.seed = seed
-        self._rng = np.random.default_rng(seed)
-        self.fired: Dict[str, int] = {}
+        self._rng = np.random.default_rng(seed)  # corruption primitives only
+        self._lock = threading.Lock()
+        self._streams: Dict[str, np.random.Generator] = {}
+        self.fired: Dict[Tuple[str, str], int] = {}
 
     # -- exception sites --------------------------------------------------
 
     def fire(self, site: str, uid: str = "") -> None:
         """Raise the site's injected error if the (seeded) die says so.
 
-        ``uid`` only labels the raised message — the decision itself comes
-        from the shared stream so the draw order, not the caller identity,
-        determines reproducibility.
+        The decision comes from the request's own ``(seed, uid)`` substream,
+        so it depends only on the per-request call sequence — never on how
+        requests from different buckets interleave across service threads.
         """
-        if not self._draw(site):
+        if not self._draw(site, uid):
             return
         exc_type = _SITE_ERRORS[site]
-        raise exc_type(f"injected {site} fault (uid={uid}, fire #{self.fired[site]})")
+        raise exc_type(f"injected {site} fault (uid={uid})")
 
-    def sleep_s(self) -> float:
+    def sleep_s(self, uid: str = "") -> float:
         """Extra latency to charge the current request (0.0 when the ``slow``
         site does not fire).  Returned, not slept: the service adds it to the
         request's clock so deadline tests stay fast."""
-        return self.config.slow_s if self._draw("slow") else 0.0
+        return self.config.slow_s if self._draw("slow", uid) else 0.0
 
-    def _draw(self, site: str) -> bool:
+    def _stream(self, uid: str) -> np.random.Generator:
+        # one substream per request: crc32(uid) folds the uid into the seed
+        # material deterministically across processes (unlike hash())
+        if uid not in self._streams:
+            self._streams[uid] = np.random.default_rng(
+                [self.seed, zlib.crc32(uid.encode("utf-8"))]
+            )
+        return self._streams[uid]
+
+    def _draw(self, site: str, uid: str) -> bool:
         p = self.config.probability(site)
-        if p <= 0.0:
-            return False
-        if self.fired.get(site, 0) >= self.config.max_per_site:
-            return False
-        # Always consume exactly one draw per call so fire/no-fire sequences
-        # are reproducible regardless of which sites are enabled.
-        hit = bool(self._rng.random() < p)
-        if hit:
-            self.fired[site] = self.fired.get(site, 0) + 1
-        return hit
+        with self._lock:
+            if p <= 0.0:
+                return False
+            if self.fired.get((site, uid), 0) >= self.config.max_per_site:
+                return False
+            # Always consume exactly one draw per call so a request's
+            # fire/no-fire sequence is reproducible regardless of which
+            # sites are enabled.
+            hit = bool(self._stream(uid).random() < p)
+            if hit:
+                self.fired[(site, uid)] = self.fired.get((site, uid), 0) + 1
+            return hit
 
     # -- byte corruption (decode fuzzing) ---------------------------------
 

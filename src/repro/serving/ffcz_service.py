@@ -6,10 +6,30 @@ with a request queue admitting heterogeneous (shape, dtype, bound) work:
   whole-field compress    the paper pipeline (plan / base / execute / encode),
                           one request per field
   pencil compress         blockwise requests bucketed — up to ``max_batch``
-                          queued tensors run as ONE ``engine.correct`` call
-                          on the donated batched buffer, each with its own
-                          resolved (E, Delta)
+                          queued tensors run as ONE packed ``(B, block)``
+                          correction on the donated batched buffer, each with
+                          its own resolved (E, Delta)
   decompress              hardened decode of service or FFCz blobs
+
+Execution is a two-stage software pipeline (``pipeline_depth``, default 2).
+Each unit of work — a pencil bucket, one field, one decode — is split at the
+device fence:
+
+  FRONT (scheduler thread)   per-request PLAN + base codec, pack the bucket
+                             into a cached ``(B, block)`` host staging buffer,
+                             and *dispatch* the POCS program asynchronously
+                             (``engine.correct_async`` / ``execute_field_async``
+                             return handles before ``jax.block_until_ready``).
+  BACK (one worker thread)   fence the handle, run the retry/degradation
+                             ladder on failure (re-dispatching synchronously),
+                             then host ENCODE and blob assembly.
+
+With ``pipeline_depth >= 2`` the ring keeps that many units in flight: unit
+*i*'s host ENCODE overlaps unit *i+1*'s device EXECUTE.  ``pipeline_depth=1``
+runs FRONT and BACK inline on the calling thread — the exact serial behaviour.
+Both modes execute the same code in the same per-request order, so responses,
+edit streams, and per-request stats are byte-identical across depths (the
+parity suite in tests/test_service_pipeline.py gates this).
 
 The headline is the failure path, not the happy path.  Every request drains
 to exactly one of completed-within-bounds or rejected-with-reason:
@@ -22,28 +42,37 @@ to exactly one of completed-within-bounds or rejected-with-reason:
                first a relaxed re-run (``max_iters`` x4, over-relaxation),
                then fft_impl rungs pallas -> packed -> xla.  Each rung taken
                is recorded in the request's stats.
-  bisect       a device allocation failure on a pencil bucket splits the
-               bucket and runs the halves (recursively, down to one request,
-               which is then rejected with the structured OOM).
+  bisect       a device allocation failure on a pencil bucket evicts the
+               bucket's cached staging buffer (so the halves don't allocate
+               against a stale full-size buffer), then splits the bucket and
+               runs the halves (recursively, down to one request, which is
+               then rejected with the structured OOM).  Injected bucket
+               faults fire against the ORIGINAL bucket lead's uid through
+               the whole recursion, so fault caps apply per bucket-unit.
   reject       infeasible bound intersections (:class:`InfeasibleBound`),
                corrupt blobs (:class:`BlobCorruptError`), and exhausted
                budgets return a structured error dict — never a raw
                exception out of :meth:`step`, and never a hang: every
-               :meth:`step` retires at least one queued request.
+               :meth:`step` retires at least one queued unit.
   timeout      a request whose deadline passes mid-stage is rejected with
                :class:`DeadlineExceeded` (disposition ``"timeout"``).
 
 A :class:`~repro.runtime.faults.FaultInjector` can be threaded through every
-stage boundary for deterministic chaos testing (tests/test_faults.py).
+stage boundary for deterministic chaos testing (tests/test_faults.py); its
+per-request substreams make the injected faults identical in serial and
+pipelined mode.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import struct
+import threading
 import time
 import zlib
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -84,7 +113,7 @@ _PENCIL_HEADER = "<ddIB"
 class ServiceConfig:
     """Queue, retry, and degradation knobs for one :class:`FFCzService`."""
 
-    max_batch: int = 8  # pencil requests fused per engine.correct call
+    max_batch: int = 8  # pencil requests fused per packed correction
     block: int = 256  # pencil length for blockwise requests
     max_iters: int = 50  # POCS budget for pencil buckets
     deadline_s: float = 30.0  # default per-request deadline
@@ -98,6 +127,10 @@ class ServiceConfig:
     relax_iters_mult: int = 4
     relax_factor: float = 1.3
     seed: int = 0  # backoff-jitter stream (determinism under test)
+    # In-flight units: 1 = serial (front + back inline), >= 2 = the back half
+    # (fence + encode) of up to depth units runs on the worker thread while
+    # the scheduler front-half dispatches the next units' device work.
+    pipeline_depth: int = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +161,7 @@ class _Request:
     payload: Any
     cfg: Any  # FFCzConfig (field) | (E_rel, Delta_rel) (pencils) | None
     deadline_s: float
+    seq: int = 0  # submission order (drain() response ordering)
     t0: float = 0.0
     penalty_s: float = 0.0  # injected slowness, charged against the deadline
     attempts: int = 0
@@ -140,9 +174,35 @@ class _Request:
         return (now - self.t0) + self.penalty_s
 
 
+@dataclasses.dataclass
+class _Staged:
+    """A unit of work after its FRONT half: what the BACK half needs.
+
+    Exactly one of three shapes, by ``kind``:
+
+      pencils     ``work`` (plan/base survivors), front-half ``responses``
+                  for the rest, and the attempt-1 dispatch as ``handle`` /
+                  ``exc`` (one of the two, or neither when ``work`` is empty)
+      field       ``plan`` / ``base_blob`` / ``eps0`` plus the attempt-1
+                  dispatch, or ``done`` when the request rejected at front
+      decompress  nothing staged — decode is pure host work, all BACK
+    """
+
+    kind: str
+    unit: List[_Request]
+    responses: Dict[str, ServiceResponse] = dataclasses.field(default_factory=dict)
+    work: List[Tuple] = dataclasses.field(default_factory=list)
+    handle: Any = None  # in-flight async handle from the front-half dispatch
+    exc: Optional[BaseException] = None  # raw front-half dispatch failure
+    plan: Any = None
+    base_blob: bytes = b""
+    eps0: Any = None
+    done: Optional[ServiceResponse] = None
+
+
 class FFCzService:
     """Continuous-batching FFCz compress/decompress front end (see module
-    docstring for the failure-path contract)."""
+    docstring for the failure-path and pipelining contract)."""
 
     def __init__(
         self,
@@ -162,6 +222,11 @@ class FFCzService:
         self._rng = np.random.default_rng(config.seed)
         self._queue: List[_Request] = []
         self._next_uid = 0
+        self._next_seq = 0
+        self._submit_seq: Dict[str, int] = {}
+        # counters / rng / timers are touched from both the scheduler and the
+        # encode worker thread
+        self._lock = threading.Lock()
         self.counters: Dict[str, int] = {
             "completed": 0,
             "rejected": 0,
@@ -170,16 +235,37 @@ class FFCzService:
             "relaxes": 0,
             "bisects": 0,
             "timeouts": 0,
+            "buffer_evictions": 0,
         }
+        # cumulative stage clocks (seconds): front = plan/base/pack/dispatch
+        # on the scheduler thread, execute = blocked on the device fence
+        # (incl. ladder re-runs), encode/decode = host codec work.  The serve
+        # bench turns these into host/device busy fractions.
+        self.timers: Dict[str, float] = {
+            "front_s": 0.0,
+            "execute_s": 0.0,
+            "encode_s": 0.0,
+            "decode_s": 0.0,
+        }
+        # host staging buffers for packed pencil buckets, keyed (B, block);
+        # populated by the scheduler front-half, evicted on allocation failure
+        self._staging: Dict[Tuple[int, int], np.ndarray] = {}
+        self._staging_lock = threading.Lock()
+        # in-flight ring: (unit requests, back-half future), oldest first
+        self._ring: Deque[Tuple[List[_Request], Future]] = collections.deque()
+        self._worker: Optional[ThreadPoolExecutor] = None
 
     # -- admission ---------------------------------------------------------
 
     def _admit(self, req: _Request) -> str:
         req.t0 = self._clock()
+        req.seq = self._next_seq
+        self._next_seq += 1
+        self._submit_seq[req.uid] = req.seq
         if self.injector is not None:
             # injected slowness is charged to the request's clock, not slept,
             # so deadline tests run in real milliseconds
-            req.penalty_s = self.injector.sleep_s()
+            req.penalty_s = self.injector.sleep_s(uid=req.uid)
         self._queue.append(req)
         return req.uid
 
@@ -221,7 +307,7 @@ class FFCzService:
         """Queue one tensor for blockwise (pencil) compression.
 
         Queued pencil requests are fused: up to ``max_batch`` of them run as
-        a single batched ``engine.correct`` call, each with its own resolved
+        a single packed batched correction, each with its own resolved
         bounds — heterogeneous shapes and dtypes batch freely because the
         engine tiles every tensor into ``block``-length pencils.
         """
@@ -259,17 +345,11 @@ class FFCzService:
 
     # -- scheduling --------------------------------------------------------
 
-    def step(self) -> List[ServiceResponse]:
-        """Retire one unit of work: a pencil bucket (up to ``max_batch``
-        fused requests) or one field/decompress request.
-
-        Always removes the popped requests from the queue — a request never
-        re-enqueues, retries happen bounded *within* the step — so ``step``
-        makes progress whenever the queue is non-empty and :meth:`drain`
-        terminates by induction.
+    def _pop_unit(self) -> List[_Request]:
+        """Pop the next unit of work off the queue: a pencil bucket (up to
+        ``max_batch`` fused requests, collected queue-wide so interleaved
+        field traffic can't break batching) or one field/decompress request.
         """
-        if not self._queue:
-            return []
         if self._queue[0].kind == "pencils":
             bucket: List[_Request] = []
             rest: List[_Request] = []
@@ -279,21 +359,94 @@ class FFCzService:
                 else:
                     rest.append(r)
             self._queue = rest
-            return self._run_pencil_bucket(bucket)
-        req = self._queue.pop(0)
-        if req.kind == "field":
-            return [self._run_field(req)]
-        return [self._run_decompress(req)]
+            return bucket
+        return [self._queue.pop(0)]
+
+    def step(self) -> List[ServiceResponse]:
+        """Retire one unit of work (a pencil bucket, one field, or one
+        decode), returning its responses in submission order.
+
+        Popped requests never re-enqueue — retries happen bounded *within*
+        the unit — so ``step`` makes progress whenever work is queued or in
+        flight, and :meth:`drain` terminates by induction.
+
+        With ``pipeline_depth >= 2`` this first tops the in-flight ring up
+        to depth (front-half + async dispatch per unit, back half submitted
+        to the worker thread), then blocks on the OLDEST unit's back half:
+        while that unit encodes on the worker, the younger units' device
+        programs are already executing.
+        """
+        if self.config.pipeline_depth <= 1:
+            if not self._queue:
+                return []
+            return self._back(self._front(self._pop_unit()))
+        while self._queue and len(self._ring) < self.config.pipeline_depth:
+            unit = self._pop_unit()
+            staged = self._front(unit)
+            self._ring.append((unit, self._executor().submit(self._back, staged)))
+        if not self._ring:
+            return []
+        unit, fut = self._ring.popleft()
+        try:
+            return fut.result()
+        except Exception as e:  # noqa: BLE001 - the back half never raises by
+            # contract; anything here (e.g. a cancelled future at teardown)
+            # still retires the unit with a structured rejection
+            err = classify_exception(e, "service")
+            return [self._reject(r, err) for r in unit]
 
     def drain(self) -> Dict[str, ServiceResponse]:
-        """Run :meth:`step` until the queue is empty; responses keyed by uid."""
+        """Run :meth:`step` until no work is queued or in flight.
+
+        Responses are keyed AND ordered by submission, regardless of the
+        order units retire (bucket fusion and the in-flight ring both reorder
+        retirement) — clients can zip submissions to responses directly.
+        """
         out: Dict[str, ServiceResponse] = {}
-        while self._queue:
+        while self._queue or self._ring:
             for resp in self.step():
                 out[resp.uid] = resp
-        return out
+        order = sorted(out, key=lambda u: self._submit_seq.get(u, 1 << 62))
+        return {u: out[u] for u in order}
+
+    @property
+    def pending(self) -> int:
+        """Units of work queued or in flight (load generators poll this to
+        decide whether :meth:`step` has anything to do)."""
+        return len(self._queue) + len(self._ring)
+
+    def _executor(self) -> ThreadPoolExecutor:
+        if self._worker is None:
+            # exactly one worker: back halves run in dispatch order, so encode
+            # order (and therefore response order within a unit) stays
+            # deterministic
+            self._worker = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="ffcz-encode"
+            )
+        return self._worker
+
+    def close(self) -> None:
+        """Tear down the encode worker (call after :meth:`drain`).  In-flight
+        back halves are cancelled; their requests reject as
+        :class:`~repro.core.errors.PipelineAborted` if :meth:`step` is still
+        polling them."""
+        while self._ring:
+            _unit, fut = self._ring.popleft()
+            fut.cancel()
+        if self._worker is not None:
+            self._worker.shutdown(wait=True)
+            self._worker = None
 
     # -- failure machinery -------------------------------------------------
+
+    def _count(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self.counters[name] += n
+
+    def _tick(self, name: str, t0: float) -> None:
+        dt = self._clock() - t0
+        with self._lock:
+            self.timers[name] += dt
 
     def _check_deadline(self, req: _Request) -> None:
         if req.elapsed(self._clock()) > req.deadline_s:
@@ -302,16 +455,19 @@ class FFCzService:
                 stage="service",
             )
 
-    def _fire(self, site: str, req: _Request) -> None:
+    def _fire(self, site: str, uid: str) -> None:
         if self.injector is not None:
-            self.injector.fire(site, uid=req.uid)
+            self.injector.fire(site, uid=uid)
 
     def _attempt(self, req: _Request, stage: str, fn: Callable[[], Any]) -> Any:
         """Run ``fn`` with deadline enforcement and bounded transient retries.
 
         Non-retryable and budget-exhausted errors re-raise classified; each
         retry backs off exponentially with seeded jitter and records a
-        ``retry:<stage>`` rung.
+        ``retry:<stage>`` rung.  Runs on the scheduler thread (front halves)
+        or the encode worker (back halves) — the jitter stream is shared and
+        lock-guarded, so only delay *values* depend on thread interleaving,
+        never retry outcomes.
         """
         while True:
             self._check_deadline(req)
@@ -322,24 +478,26 @@ class FFCzService:
                 if not err.retryable or req.attempts >= self.config.max_retries:
                     raise err from e
                 req.attempts += 1
-                self.counters["retries"] += 1
+                self._count("retries")
                 req.rungs.append(f"retry:{stage}")
                 delay = self.config.backoff_base_s * (
                     self.config.backoff_factor ** (req.attempts - 1)
                 )
-                delay *= 1.0 + self.config.backoff_jitter * float(self._rng.random())
+                with self._lock:
+                    jitter = float(self._rng.random())
+                delay *= 1.0 + self.config.backoff_jitter * jitter
                 self._sleep(delay)
 
     def _reject(self, req: _Request, err: FFCzError) -> ServiceResponse:
-        self.counters["rejected"] += 1
+        self._count("rejected")
         if err.disposition == "timeout":
-            self.counters["timeouts"] += 1
+            self._count("timeouts")
         return ServiceResponse(
             uid=req.uid, ok=False, error=err.to_dict(), stats=self._stats(req)
         )
 
     def _complete(self, req: _Request, payload: Any) -> ServiceResponse:
-        self.counters["completed"] += 1
+        self._count("completed")
         return ServiceResponse(uid=req.uid, ok=True, payload=payload, stats=self._stats(req))
 
     def _stats(self, req: _Request) -> RequestStats:
@@ -352,52 +510,154 @@ class FFCzService:
             final_violations=req.final_violations,
         )
 
+    # -- staging-buffer cache ----------------------------------------------
+
+    def _bucket_rows(self, work: List[Tuple]) -> int:
+        b = self.config.block
+        return sum(-(-int(np.asarray(w[2]).size) // b) for w in work)
+
+    def _staging_get(self, rows: int) -> np.ndarray:
+        """Cached ``(rows, block)`` host buffer for packing a pencil bucket.
+        Only the scheduler front-half packs, so handing out the shared buffer
+        is race-free; the async dispatch copies it to the device before
+        ``correct_async`` returns, after which it is reusable."""
+        key = (rows, self.config.block)
+        with self._staging_lock:
+            buf = self._staging.get(key)
+            if buf is None:
+                buf = np.zeros(key, np.float32)
+                self._staging[key] = buf
+        return buf
+
+    def _staging_evict(self, rows: int) -> None:
+        """Drop the cached full-bucket buffer after an allocation failure so
+        the bisected halves don't allocate against a stale full-size buffer."""
+        key = (rows, self.config.block)
+        with self._staging_lock:
+            dropped = self._staging.pop(key, None) is not None
+        if dropped:
+            self._count("buffer_evictions")
+
+    # -- pipeline halves ---------------------------------------------------
+
+    def _front(self, unit: List[_Request]) -> _Staged:
+        """FRONT half, scheduler thread: plan/base + async EXECUTE dispatch."""
+        t0 = self._clock()
+        try:
+            kind = unit[0].kind
+            if kind == "pencils":
+                return self._front_pencils(unit)
+            if kind == "field":
+                return self._front_field(unit[0])
+            return _Staged(kind="decompress", unit=unit)
+        finally:
+            self._tick("front_s", t0)
+
+    def _back(self, staged: _Staged) -> List[ServiceResponse]:
+        """BACK half, worker thread (or inline at depth 1): fence + retry
+        ladder + ENCODE.  Never raises — every request retires structured."""
+        if staged.kind == "pencils":
+            return self._back_pencils(staged)
+        if staged.kind == "field":
+            return [self._back_field(staged)]
+        t0 = self._clock()
+        try:
+            return [self._run_decompress(staged.unit[0])]
+        finally:
+            self._tick("decode_s", t0)
+
     # -- whole-field path --------------------------------------------------
 
-    def _run_field(self, req: _Request) -> ServiceResponse:
+    def _dispatch_field(self, req: _Request, eps0: np.ndarray, run_plan):
+        self._fire("dispatch", req.uid)
+        self._fire("oom", req.uid)
+        return self.engine.execute_field_async(eps0, run_plan)
+
+    def _front_field(self, req: _Request) -> _Staged:
         try:
-            blob = self._compress_field(req)
-            return self._complete(req, blob.to_bytes())
+            cfg: FFCzConfig = req.cfg
+            x32 = np.asarray(req.payload, dtype=np.float32)
+            plan = self._attempt(req, "plan", lambda: self.engine.plan_field(x32, cfg))
+
+            def _base():
+                self._fire("codec", req.uid)
+                blob = self.base.compress(x32, plan.E_proj)
+                return blob, np.asarray(self.base.decompress(blob), dtype=np.float32)
+
+            base_blob, x_hat = self._attempt(req, "base", _base)
+            eps0 = x_hat - x32
+            # attempt 1 of the first ladder rung dispatches here so the device
+            # starts while the previous unit is still encoding; failures are
+            # stashed raw and re-raised inside the back half's ladder, which
+            # owns classification and the retry budget
+            handle = exc = None
+            try:
+                handle = self._dispatch_field(
+                    req, eps0, dataclasses.replace(plan, fft_impl=plan.fft_impl)
+                )
+            except Exception as e:  # noqa: BLE001 - re-raised in the back half
+                exc = e
+            return _Staged(
+                kind="field",
+                unit=[req],
+                plan=plan,
+                base_blob=base_blob,
+                eps0=eps0,
+                handle=handle,
+                exc=exc,
+            )
+        except FFCzError as err:
+            return _Staged(kind="field", unit=[req], done=self._reject(req, err))
+        except Exception as e:  # noqa: BLE001 - terminal safety net
+            return _Staged(
+                kind="field", unit=[req], done=self._reject(req, classify_exception(e, "service"))
+            )
+
+    def _back_field(self, staged: _Staged) -> ServiceResponse:
+        if staged.done is not None:
+            return staged.done
+        req = staged.unit[0]
+        try:
+            result, run_plan = self._execute_with_ladder(
+                req, staged.eps0, staged.plan, first=(staged.handle, staged.exc)
+            )
+            req.converged = bool(result.converged)
+            req.final_violations = int(result.final_violations)
+
+            def _encode():
+                self._fire("codec", req.uid)
+                return self.engine.encode_field(result, run_plan)
+
+            t0 = self._clock()
+            try:
+                se, fe = self._attempt(req, "encode", _encode)
+                cfg: FFCzConfig = req.cfg
+                blob = FFCzBlob(
+                    base_blob=staged.base_blob,
+                    spat_edits=se,
+                    freq_edits=fe,
+                    E=run_plan.E,
+                    Delta_scalar=run_plan.delta_scalar,
+                    pointwise_delta=run_plan.pointwise_bytes(),
+                    shape=run_plan.shape,
+                    crc=cfg.crc,
+                )
+                payload = blob.to_bytes()
+            finally:
+                self._tick("encode_s", t0)
+            return self._complete(req, payload)
         except FFCzError as err:
             return self._reject(req, err)
         except Exception as e:  # noqa: BLE001 - terminal safety net
             return self._reject(req, classify_exception(e, "service"))
 
-    def _compress_field(self, req: _Request) -> FFCzBlob:
-        cfg: FFCzConfig = req.cfg
-        x32 = np.asarray(req.payload, dtype=np.float32)
-        plan = self._attempt(req, "plan", lambda: self.engine.plan_field(x32, cfg))
-
-        def _base():
-            self._fire("codec", req)
-            blob = self.base.compress(x32, plan.E_proj)
-            return blob, np.asarray(self.base.decompress(blob), dtype=np.float32)
-
-        base_blob, x_hat = self._attempt(req, "base", _base)
-        eps0 = x_hat - x32
-
-        result, plan = self._execute_with_ladder(req, eps0, plan)
-        req.converged = bool(result.converged)
-        req.final_violations = int(result.final_violations)
-
-        def _encode():
-            self._fire("codec", req)
-            return self.engine.encode_field(result, plan)
-
-        se, fe = self._attempt(req, "encode", _encode)
-        return FFCzBlob(
-            base_blob=base_blob,
-            spat_edits=se,
-            freq_edits=fe,
-            E=plan.E,
-            Delta_scalar=plan.delta_scalar,
-            pointwise_delta=plan.pointwise_bytes(),
-            shape=plan.shape,
-            crc=cfg.crc,
-        )
-
-    def _execute_with_ladder(self, req: _Request, eps0: np.ndarray, plan):
+    def _execute_with_ladder(self, req: _Request, eps0: np.ndarray, plan, first=None):
         """EXECUTE with the degradation ladder (see module docstring).
+
+        ``first`` carries the front half's attempt-1 dispatch — an in-flight
+        handle or its raw dispatch exception — consumed by the first attempt
+        so the per-request fire/attempt sequence is identical to serial mode.
+        Later attempts (and rungs) re-dispatch synchronously right here.
 
         Terminates: the impl chain pallas -> packed -> xla is finite, the
         relax rung fires at most once, and each attempt's retries are
@@ -405,38 +665,47 @@ class FFCzService:
         """
         impl = plan.fft_impl
         relaxed = False
+        pre = first if first is not None and first != (None, None) else None
         while True:
             req.fft_impl = impl
             run_plan = dataclasses.replace(plan, fft_impl=impl)
 
             def _exec(p=run_plan):
-                self._fire("dispatch", req)
-                self._fire("oom", req)
-                return self.engine.execute_field(eps0, p)
+                nonlocal pre
+                if pre is not None:
+                    handle, exc = pre
+                    pre = None
+                    if exc is not None:
+                        raise exc
+                    return handle.result()
+                return self._dispatch_field(req, eps0, p).result()
 
+            t0 = self._clock()
             try:
                 result = self._attempt(req, "execute", _exec)
             except FFCzError as err:
+                self._tick("execute_s", t0)
                 nxt = _LADDER.get(impl)
                 if nxt is None or not err.transient:
                     raise
                 # transient failure survived the retry budget on this rung:
                 # descend rather than reject
                 impl = nxt
-                self.counters["fallbacks"] += 1
+                self._count("fallbacks")
                 req.rungs.append(f"fallback:{impl}")
                 continue
+            self._tick("execute_s", t0)
             if result.converged or relaxed or not self.config.relax_on_nonconvergence:
                 return result, run_plan
             # Non-convergence rung: one re-run with a bigger budget and
             # over-relaxed projections.  The pallas kernels require
             # relax == 1.0, so that rung implies the packed transform.
             relaxed = True
-            self.counters["relaxes"] += 1
+            self._count("relaxes")
             req.rungs.append("relax")
             if impl == "pallas":
                 impl = "packed"
-                self.counters["fallbacks"] += 1
+                self._count("fallbacks")
                 req.rungs.append(f"fallback:{impl}")
             plan = dataclasses.replace(
                 plan,
@@ -446,8 +715,25 @@ class FFCzService:
 
     # -- pencil bucket path ------------------------------------------------
 
-    def _run_pencil_bucket(self, bucket: List[_Request]) -> List[ServiceResponse]:
-        """Per-request plan/base, ONE fused correction, per-request encode."""
+    def _dispatch_bucket(self, work: List[Tuple], fire_uid: str, staging=None):
+        """One fused dispatch per bucket attempt -> one dispatch/OOM draw,
+        always against the ORIGINAL bucket lead's uid (``fire_uid``), so
+        injected-fault caps span the whole bisect recursion."""
+        self._fire("dispatch", fire_uid)
+        self._fire("oom", fire_uid)
+        return self.engine.correct_async(
+            [w[2] for w in work],
+            [w[4].E_proj for w in work],
+            [w[4].Delta_proj for w in work],
+            block=self.config.block,
+            max_iters=self.config.max_iters,
+            return_edits=True,
+            return_corrected=False,
+            staging=staging,
+        )
+
+    def _front_pencils(self, bucket: List[_Request]) -> _Staged:
+        """Per-request plan/base, then ONE fused async dispatch."""
         responses: Dict[str, ServiceResponse] = {}
         work: List[Tuple[_Request, bytes, np.ndarray, np.ndarray, Any]] = []
         for req in bucket:
@@ -468,7 +754,7 @@ class FFCzService:
                     )
 
                 def _base(x=x32, p=plan, r=req):
-                    self._fire("codec", r)
+                    self._fire("codec", r.uid)
                     blob = self.base.compress(x, p.E_proj)
                     return blob, np.asarray(self.base.decompress(blob), dtype=np.float32)
 
@@ -481,72 +767,104 @@ class FFCzService:
             except Exception as e:  # noqa: BLE001
                 responses[req.uid] = self._reject(req, classify_exception(e, "plan"))
 
-        for resp in self._execute_bucket(work):
-            responses[resp.uid] = resp
+        handle = exc = None
+        if work:
+            try:
+                handle = self._dispatch_bucket(
+                    work, work[0][0].uid, staging=self._staging_get(self._bucket_rows(work))
+                )
+            except Exception as e:  # noqa: BLE001 - re-raised in the back half
+                exc = e
+        return _Staged(
+            kind="pencils", unit=bucket, responses=responses, work=work, handle=handle, exc=exc
+        )
+
+    def _back_pencils(self, staged: _Staged) -> List[ServiceResponse]:
+        responses = dict(staged.responses)
+        if staged.work:
+            first = (staged.handle, staged.exc)
+            for resp in self._execute_bucket(staged.work, staged.work[0][0].uid, first=first):
+                responses[resp.uid] = resp
         # preserve submission order in the returned list
-        return [responses[r.uid] for r in bucket]
+        return [responses[r.uid] for r in staged.unit]
 
-    def _execute_bucket(self, work: List[Tuple]) -> List[ServiceResponse]:
-        """One fused correction; bisect on allocation failure.
+    def _execute_bucket(
+        self, work: List[Tuple], fire_uid: str, first=None
+    ) -> List[ServiceResponse]:
+        """Fence one fused correction; bisect on allocation failure.
 
-        Recursion depth is log2(len(work)); a single-request OOM rejects, so
-        the recursion always terminates with every request retired.
+        ``first`` carries the front half's attempt-1 dispatch (handle or raw
+        exception); retries and bisected halves re-dispatch here, without the
+        shared staging buffer (the scheduler thread may be packing the next
+        bucket into it).  Recursion depth is log2(len(work)); a
+        single-request OOM rejects, so the recursion always terminates with
+        every request retired.
         """
         if not work:
             return []
+        pre = first if first is not None and first != (None, None) else None
 
         def _correct():
-            # one fused device call per bucket -> one dispatch/OOM draw
-            self._fire("dispatch", work[0][0])
-            self._fire("oom", work[0][0])
-            return self.engine.correct(
-                [w[2] for w in work],
-                [w[4].E_proj for w in work],
-                [w[4].Delta_proj for w in work],
-                block=self.config.block,
-                max_iters=self.config.max_iters,
-                return_edits=True,
-                return_corrected=False,
-            )
+            nonlocal pre
+            if pre is not None:
+                handle, exc = pre
+                pre = None
+                if exc is not None:
+                    raise exc
+                return handle.result()
+            return self._dispatch_bucket(work, fire_uid, staging=None).result()
 
         # retry budget for the fused call is carried by the bucket's first
         # request; a transient mid-bucket failure re-runs the whole bucket
         lead = work[0][0]
+        t0 = self._clock()
         try:
             _corr, edits, stats = self._attempt(lead, "execute", _correct)
         except ResourceExhausted as err:
+            self._tick("execute_s", t0)
+            # cache hygiene first: the bisected halves must not allocate
+            # against the stale full-size staging buffer
+            self._staging_evict(self._bucket_rows(work))
             if len(work) == 1:
                 return [self._reject(work[0][0], err)]
-            self.counters["bisects"] += 1
+            self._count("bisects")
             for req, *_ in work:
                 req.rungs.append("bisect")
             mid = len(work) // 2
-            return self._execute_bucket(work[:mid]) + self._execute_bucket(work[mid:])
+            return self._execute_bucket(work[:mid], fire_uid) + self._execute_bucket(
+                work[mid:], fire_uid
+            )
         except FFCzError as err:
+            self._tick("execute_s", t0)
             # non-OOM terminal failure: every request in the bucket rejects
             # with the same classified error
             return [self._reject(req, err) for req, *_ in work]
+        self._tick("execute_s", t0)
 
         conv = np.asarray(stats.converged)
         out = []
-        for j, ((req, base_blob, _eps0, tiles0, plan), (spat_t, freq_t)) in enumerate(
-            zip(work, edits)
-        ):
-            req.converged = bool(conv[j]) if conv.size else True
-            try:
+        t0 = self._clock()
+        try:
+            for j, ((req, base_blob, _eps0, tiles0, plan), (spat_t, freq_t)) in enumerate(
+                zip(work, edits)
+            ):
+                req.converged = bool(conv[j]) if conv.size else True
+                try:
 
-                def _encode(s=spat_t, f=freq_t, t=tiles0, p=plan, r=req):
-                    self._fire("codec", r)
-                    return self.engine.encode_pencils(s, f, t, p, codec="zlib")
+                    def _encode(s=spat_t, f=freq_t, t=tiles0, p=plan, r=req):
+                        self._fire("codec", r.uid)
+                        return self.engine.encode_pencils(s, f, t, p, codec="zlib")
 
-                se, fe = self._attempt(req, "encode", _encode)
-                x = np.asarray(req.payload)
-                payload = _pencil_blob(x.shape, base_blob, se, fe, plan, self.config.block)
-                out.append(self._complete(req, payload))
-            except FFCzError as err:
-                out.append(self._reject(req, err))
-            except Exception as e:  # noqa: BLE001
-                out.append(self._reject(req, classify_exception(e, "encode")))
+                    se, fe = self._attempt(req, "encode", _encode)
+                    x = np.asarray(req.payload)
+                    payload = _pencil_blob(x.shape, base_blob, se, fe, plan, self.config.block)
+                    out.append(self._complete(req, payload))
+                except FFCzError as err:
+                    out.append(self._reject(req, err))
+                except Exception as e:  # noqa: BLE001
+                    out.append(self._reject(req, classify_exception(e, "encode")))
+        finally:
+            self._tick("encode_s", t0)
         return out
 
     # -- decode path -------------------------------------------------------

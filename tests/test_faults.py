@@ -53,16 +53,18 @@ def _mixed_workload(svc, rng, n_fields=3, n_pencils=6):
 
 
 class TestChaosDrain:
-    def test_drains_under_all_fault_sites(self):
+    @pytest.mark.parametrize("depth", [1, 2])
+    def test_drains_under_all_fault_sites(self, depth):
         """Mixed faults at every site: the queue still fully drains, each
-        request completing or rejecting with a structured reason."""
+        request completing or rejecting with a structured reason — in serial
+        mode and with the two-stage pipeline in flight alike."""
         inj = FaultInjector(
             FaultConfig(
                 p_codec=0.4, p_dispatch=0.4, p_oom=0.4, p_slow=0.2, slow_s=120.0, max_per_site=2
             ),
             seed=SEED,
         )
-        svc = _service(inj, deadline_s=20.0)
+        svc = _service(inj, deadline_s=20.0, pipeline_depth=depth)
         rng = np.random.default_rng(SEED)
         uids = _mixed_workload(svc, rng)
         # plus decode work, some of it deliberately corrupt
@@ -107,6 +109,60 @@ class TestChaosDrain:
 
         assert run() == run()
 
+    def test_pipelined_matches_serial_counters(self):
+        """The pipelined drain is scheduling-invariant: for the same fault
+        seed, per-request outcomes, rung sequences, attempt counts, and the
+        service's failure-machinery counters all match the serial run (the
+        injector draws from per-request substreams, so thread interleaving
+        cannot change which faults fire)."""
+
+        def run(depth):
+            inj = FaultInjector(
+                FaultConfig(p_codec=0.5, p_dispatch=0.5, p_oom=0.5, max_per_site=2), seed=SEED
+            )
+            svc = _service(inj, pipeline_depth=depth)
+            rng = np.random.default_rng(SEED)
+            uids = _mixed_workload(svc, rng, n_fields=2, n_pencils=6)
+            res = svc.drain()
+            svc.close()
+            per_request = [
+                (
+                    u,
+                    res[u].ok,
+                    res[u].stats.rungs,
+                    res[u].stats.attempts,
+                    None if res[u].ok else res[u].error["type"],
+                )
+                for u in uids
+            ]
+            return per_request, dict(svc.counters)
+
+        serial, serial_counters = run(1)
+        pipelined, pipelined_counters = run(2)
+        assert serial == pipelined
+        assert serial_counters == pipelined_counters
+
+    def test_oom_evicts_staging_buffer_before_bisect(self):
+        """Donated-buffer cache hygiene: the injected allocation failure on a
+        fused bucket drops the cached full-size (B, block) staging buffer
+        before the bisected halves run, so they never allocate against it."""
+        inj = FaultInjector(FaultConfig(p_oom=1.0, max_per_site=1), seed=SEED)
+        svc = _service(inj, pipeline_depth=2)
+        rng = np.random.default_rng(SEED)
+        uids = [
+            svc.submit_pencils(rng.standard_normal(150).astype(np.float32), 1e-3, 1e-3)
+            for _ in range(4)
+        ]
+        res = svc.drain()
+        svc.close()
+        assert all(res[u].ok for u in uids)
+        assert svc.counters["bisects"] >= 1
+        assert svc.counters["buffer_evictions"] >= 1
+        # the evicted full-bucket key is gone; only shapes cached after the
+        # bisect (the halves re-dispatch without staging) may remain
+        full_rows = sum(-(-150 // 64) for _ in uids)
+        assert (full_rows, 64) not in svc._staging
+
 
 class TestDegradationLadder:
     def test_oom_bisects_bucket(self):
@@ -139,10 +195,13 @@ class TestDegradationLadder:
         """A transform that keeps failing walks pallas -> packed -> xla."""
 
         class FlakyTransformEngine(CorrectionEngine):
-            def execute_field(self, eps0, plan):
+            # the service dispatches through the async API (sync
+            # execute_field routes through it too), so the dispatch hook is
+            # the one injection point covering both modes
+            def execute_field_async(self, eps0, plan):
                 if plan.fft_impl != "xla":
                     raise RuntimeError(f"injected transform failure ({plan.fft_impl})")
-                return super().execute_field(eps0, plan)
+                return super().execute_field_async(eps0, plan)
 
         svc = FFCzService(
             get_compressor("szlike"),

@@ -1,0 +1,219 @@
+"""Pipelined-serving gates: depth parity, drain ordering, async engine twins.
+
+ISSUE 7's contract in test form:
+
+  parity      with a frozen clock, every response field — payload bytes,
+              edit streams (inside the blobs), error dicts, RequestStats —
+              is byte-identical between ``pipeline_depth=1`` (serial) and
+              ``pipeline_depth=2`` (overlapped), with and without chaos.
+  ordering    drain() returns responses keyed AND ordered by submission,
+              regardless of bucket fusion or ring retirement order.
+  async twins engine.execute_field_async / correct_async produce bitwise
+              the results of their synchronous counterparts, and the packed
+              path honours caller-provided staging buffers.
+"""
+
+import numpy as np
+import pytest
+
+from repro.compressors import get_compressor
+from repro.core import blockwise
+from repro.core.engine import default_engine
+from repro.core.ffcz import FFCzConfig
+from repro.runtime.faults import FaultConfig, FaultInjector
+from repro.serving.ffcz_service import FFCzService, ServiceConfig
+
+SEED = 20260809
+
+pytestmark = pytest.mark.timeout(120)
+
+
+def _service(depth, injector=None, **cfg_kw):
+    defaults = dict(max_batch=4, block=64, seed=SEED, pipeline_depth=depth)
+    defaults.update(cfg_kw)
+    # frozen clock + no-op sleep: latency_s is identically 0.0 in both modes,
+    # so whole RequestStats objects (not just outcome fields) must compare
+    # equal for parity to hold
+    return FFCzService(
+        get_compressor("szlike"),
+        config=ServiceConfig(**defaults),
+        injector=injector,
+        clock=lambda: 0.0,
+        sleep=lambda s: None,
+    )
+
+
+def _field_cfg(**kw):
+    defaults = dict(E_rel=1e-3, Delta_rel=1e-3, max_iters=300, verify=False)
+    defaults.update(kw)
+    return FFCzConfig(**defaults)
+
+
+def _submit_mixed(svc, rng, n_fields=2, n_pencils=6):
+    uids = []
+    for i in range(max(n_fields, n_pencils)):
+        if i < n_fields:
+            x = rng.standard_normal((12, 12)).astype(np.float32)
+            uids.append(svc.submit_compress(x, _field_cfg()))
+        if i < n_pencils:
+            size = int(rng.integers(40, 300))
+            uids.append(
+                svc.submit_pencils(rng.standard_normal(size).astype(np.float32), 1e-3, 1e-3)
+            )
+    return uids
+
+
+class TestDepthParity:
+    def _run(self, depth, injector_cfg=None):
+        inj = FaultInjector(injector_cfg, seed=SEED) if injector_cfg else None
+        svc = _service(depth, injector=inj)
+        rng = np.random.default_rng(SEED)
+        uids = _submit_mixed(svc, rng)
+        res = svc.drain()
+        svc.close()
+        return uids, res, dict(svc.counters)
+
+    def test_clean_responses_byte_identical(self):
+        u1, r1, c1 = self._run(1)
+        u2, r2, c2 = self._run(2)
+        assert u1 == u2 and list(r1) == list(r2)
+        assert c1 == c2
+        for u in u1:
+            assert r1[u].ok and r2[u].ok
+            assert r1[u].payload == r2[u].payload, f"payload bytes differ for {u}"
+            assert r1[u].stats == r2[u].stats, f"stats differ for {u}"
+
+    def test_chaos_responses_byte_identical(self):
+        cfg = FaultConfig(p_codec=0.5, p_dispatch=0.5, p_oom=0.5, max_per_site=2)
+        u1, r1, c1 = self._run(1, cfg)
+        u2, r2, c2 = self._run(2, cfg)
+        assert u1 == u2 and list(r1) == list(r2)
+        assert c1 == c2
+        for u in u1:
+            a, b = r1[u], r2[u]
+            assert (a.ok, a.payload, a.error, a.stats) == (b.ok, b.payload, b.error, b.stats)
+
+    def test_depth_one_has_no_worker_thread(self):
+        svc = _service(1)
+        rng = np.random.default_rng(SEED)
+        _submit_mixed(svc, rng, n_fields=1, n_pencils=2)
+        svc.drain()
+        assert svc._worker is None, "serial mode must not spin up the encode worker"
+
+    def test_pipelined_decode_roundtrip(self):
+        svc = _service(2)
+        rng = np.random.default_rng(SEED)
+        x = rng.standard_normal(200).astype(np.float32)
+        u = svc.submit_pencils(x, 1e-3, 1e-3)
+        blob = svc.drain()[u].payload
+        d = svc.submit_decompress(blob)
+        out = svc.drain()[d].payload
+        svc.close()
+        assert out.shape == x.shape
+        assert np.max(np.abs(out.astype(np.float64) - x)) <= 2e-3 * np.ptp(x)
+
+
+class TestDrainOrdering:
+    def test_responses_ordered_by_submission(self):
+        """Regression (ISSUE 7 satellite): bucket fusion retires pencil
+        requests together and fields singly, so retirement order interleaves
+        differently from submission order — drain() must hide that."""
+        for depth in (1, 2):
+            svc = _service(depth, max_batch=3)
+            rng = np.random.default_rng(SEED)
+            uids = []
+            # pencil, field, pencil, field, ... : the three pencils of each
+            # fused bucket retire together, ahead of interleaved fields
+            for i in range(9):
+                if i % 2 == 0:
+                    uids.append(
+                        svc.submit_pencils(
+                            rng.standard_normal(100).astype(np.float32), 1e-3, 1e-3
+                        )
+                    )
+                else:
+                    x = rng.standard_normal((10, 10)).astype(np.float32)
+                    uids.append(svc.submit_compress(x, _field_cfg()))
+            res = svc.drain()
+            svc.close()
+            assert list(res) == uids, f"depth={depth}: drain order != submission order"
+            assert all(res[u].ok for u in uids)
+
+    def test_step_returns_bucket_in_submission_order(self):
+        svc = _service(2)
+        rng = np.random.default_rng(SEED)
+        uids = [
+            svc.submit_pencils(rng.standard_normal(80).astype(np.float32), 1e-3, 1e-3)
+            for _ in range(4)
+        ]
+        got = [r.uid for r in svc.step()]
+        svc.close()
+        assert got == uids
+
+
+class TestAsyncEngineTwins:
+    def test_correct_async_bitwise_matches_correct(self):
+        eng = default_engine()
+        rng = np.random.default_rng(SEED)
+        ts = [rng.standard_normal(n).astype(np.float32) * 0.01 for n in (100, 250, 64)]
+        E = [0.01, 0.02, 0.01]
+        D = [0.01, 0.01, 0.02]
+        c1, e1, s1 = eng.correct(
+            ts, E, D, block=64, max_iters=20, return_edits=True, return_corrected=True
+        )
+        h = eng.correct_async(
+            ts, E, D, block=64, max_iters=20, return_edits=True, return_corrected=True
+        )
+        c2, e2, s2 = h.result()
+        assert h.result() is not None  # idempotent re-read
+        for a, b in zip(c1, c2):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        for (a_s, a_f), (b_s, b_f) in zip(e1, e2):
+            assert np.array_equal(np.asarray(a_s), np.asarray(b_s))
+            assert np.array_equal(np.asarray(a_f), np.asarray(b_f))
+        assert np.array_equal(np.asarray(s1.iterations), np.asarray(s2.iterations))
+        assert np.array_equal(np.asarray(s1.converged), np.asarray(s2.converged))
+
+    def test_execute_field_async_bitwise_matches_sync(self):
+        eng = default_engine()
+        rng = np.random.default_rng(SEED)
+        x = rng.standard_normal((24, 24)).astype(np.float32)
+        plan = eng.plan_field(x, _field_cfg())
+        eps0 = (x * 0.001).astype(np.float32)
+        r_sync = eng.execute_field(eps0, plan)
+        r_async = eng.execute_field_async(eps0, plan).result()
+        assert np.array_equal(r_sync.eps, r_async.eps)
+        assert np.array_equal(r_sync.spat, r_async.spat)
+        assert np.array_equal(r_sync.freq, r_async.freq)
+        assert (r_sync.converged, r_sync.iterations) == (r_async.converged, r_async.iterations)
+
+    def test_pack_batch_reuses_staging(self):
+        rng = np.random.default_rng(SEED)
+        ts = [rng.standard_normal(n).astype(np.float32) for n in (100, 200)]
+        packed, counts, pads = blockwise.pack_batch(ts, 64)
+        again, counts2, pads2 = blockwise.pack_batch(ts, 64, out=packed)
+        assert again is packed and counts == counts2 and pads == pads2
+        # mismatched shape: allocates fresh rather than corrupting
+        other, _, _ = blockwise.pack_batch(ts[:1], 64, out=packed)
+        assert other is not packed
+
+    def test_empty_batch_handle(self):
+        eng = default_engine()
+        h = eng.correct_async([], [], [], block=64, return_edits=True)
+        corrected, edits, stats = h.result()
+        assert corrected == [] and edits == []
+        assert np.asarray(stats.converged).size == 0
+
+    def test_service_staging_cache_populates_and_reuses(self):
+        svc = _service(2)
+        rng = np.random.default_rng(SEED)
+        for _ in range(2):
+            uids = [
+                svc.submit_pencils(rng.standard_normal(100).astype(np.float32), 1e-3, 1e-3)
+                for _ in range(4)
+            ]
+            res = svc.drain()
+            assert all(res[u].ok for u in uids)
+        svc.close()
+        # 4 tensors x ceil(100/64)=2 rows -> one cached (8, 64) buffer, reused
+        assert list(svc._staging) == [(8, 64)]
