@@ -50,6 +50,12 @@ RECORDED = os.path.join(ROOT, "BENCH_pocs.json")
 #   engine_field           recorded ~1.15-2.07x  -> bar 1.05
 #   batched                recorded ~1.10-1.26x  -> bar 0.85 (CPU is
 #                          ~parity by design; the row guards collapse)
+#   stream/warm-vs-cold    the ISSUE 8 acceptance floor: warm-starting POCS
+#                          from the previous frame's converged spectrum must
+#                          cut mean iterations >= 1.2x on a coherent
+#                          sequence (recorded ~10x; the ratio is an
+#                          iteration count, so it is noise-free — the bar
+#                          guards the warm path going dead, not jitter)
 # Interpret-mode pallas rows and fake-device sharded rows carry no bar:
 # their CPU numbers price emulation/core-sharing, not the claim.
 THRESHOLDS = {
@@ -60,6 +66,7 @@ THRESHOLDS = {
     ],
     ("engine_field", "engine-device"): [("speedup_engine_vs_host", 1.05, None)],
     ("batched", "correct_batch"): [("speedup_batched_vs_loop", 0.85, None)],
+    ("stream", "warm-vs-cold"): [("iter_reduction_warm_vs_cold", 1.2, None)],
 }
 
 # serve/pipelined-vs-serial (benchmarks/bench_serve.py): the ISSUE 7

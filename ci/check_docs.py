@@ -1,0 +1,138 @@
+"""Docs gate: cross-reference link check, flag-table drift, example smoke.
+
+Three checks over the ``docs/`` tree (all run by the CI docs leg):
+
+1. **Link check** — every relative markdown link in ``docs/*.md`` (and the
+   docs pointers in README-level files that name docs pages) must resolve to
+   an existing file after stripping any ``#anchor``.  External ``http(s)``
+   links are not fetched.
+
+2. **Flag-table drift** — the flag reference in docs/serving.md between the
+   ``FLAG_TABLE_START`` / ``FLAG_TABLE_END`` markers must equal the output
+   of ``repro.launch.serve_ffcz.flag_table()`` (generated from the shared
+   ``add_*_args`` builders).  ``--write-flag-table`` regenerates it in
+   place; CI runs the diff.
+
+3. **Example smoke** — ``examples/quickstart.py --quick`` and
+   ``examples/stream_eeg.py --quick`` must exit 0 (skipped with
+   ``--no-examples``).
+
+Usage::
+
+    PYTHONPATH=src python ci/check_docs.py
+    PYTHONPATH=src python ci/check_docs.py --write-flag-table
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = os.path.join(REPO, "docs")
+SERVING_MD = os.path.join(DOCS, "serving.md")
+MARK_START = "<!-- FLAG_TABLE_START -->"
+MARK_END = "<!-- FLAG_TABLE_END -->"
+EXAMPLES = ("examples/quickstart.py", "examples/stream_eeg.py")
+
+# [text](target) — excluding images; target split from any title/anchor
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def check_links() -> list:
+    errors = []
+    for name in sorted(os.listdir(DOCS)):
+        if not name.endswith(".md"):
+            continue
+        path = os.path.join(DOCS, name)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for m in _LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:  # pure in-page anchor
+                continue
+            resolved = os.path.normpath(os.path.join(DOCS, rel))
+            if not os.path.exists(resolved):
+                errors.append(f"{name}: broken link -> {target}")
+    return errors
+
+
+def _split_serving_md() -> tuple:
+    with open(SERVING_MD, encoding="utf-8") as f:
+        text = f.read()
+    try:
+        head, rest = text.split(MARK_START, 1)
+        table, tail = rest.split(MARK_END, 1)
+    except ValueError:
+        return None, None, None, None
+    return head, table.strip("\n"), tail, text
+
+
+def check_flag_table(write: bool) -> list:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.launch.serve_ffcz import flag_table
+
+    expected = flag_table()
+    head, current, tail, _text = _split_serving_md()
+    if head is None:
+        return [f"docs/serving.md: missing {MARK_START} / {MARK_END} markers"]
+    if current == expected:
+        return []
+    if write:
+        with open(SERVING_MD, "w", encoding="utf-8") as f:
+            f.write(head + MARK_START + "\n" + expected + "\n" + MARK_END + tail)
+        print("docs/serving.md: flag table rewritten")
+        return []
+    return [
+        "docs/serving.md: flag table drifted from repro.launch.serve_ffcz "
+        "add_*_args builders — regenerate with "
+        "`PYTHONPATH=src python ci/check_docs.py --write-flag-table`"
+    ]
+
+
+def run_examples() -> list:
+    errors = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    for rel in EXAMPLES:
+        cmd = [sys.executable, os.path.join(REPO, rel), "--quick"]
+        print(f"running {rel} --quick ...")
+        proc = subprocess.run(cmd, cwd=REPO, env=env, capture_output=True, text=True)
+        if proc.returncode != 0:
+            tail = (proc.stdout + proc.stderr).strip().splitlines()[-15:]
+            errors.append(f"{rel} --quick exited {proc.returncode}:\n  " + "\n  ".join(tail))
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write-flag-table", action="store_true",
+                    help="regenerate the docs/serving.md flag table in place")
+    ap.add_argument("--no-examples", action="store_true",
+                    help="skip the example smoke runs (link + drift checks only)")
+    args = ap.parse_args()
+
+    errors = check_links()
+    errors += check_flag_table(write=args.write_flag_table)
+    if not args.no_examples:
+        errors += run_examples()
+
+    if errors:
+        print("\nDOCS CHECK FAILED:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print("docs check OK (links, flag table, examples)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

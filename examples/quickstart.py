@@ -1,28 +1,43 @@
 """Quickstart: dual-domain error-bounded compression of a cosmology-like field.
 
     PYTHONPATH=src:. python examples/quickstart.py
+    PYTHONPATH=src:. python examples/quickstart.py --quick   # small field, CI docs leg
 
 Compresses a synthetic Nyx-like Gaussian random field (power-law spectrum)
 with SZ3-like base + FFCz correction, prints both guarantees and the storage
 breakdown, and verifies the power spectrum stays in the ribbon.
 """
 
+import argparse
+
 import numpy as np
 import jax.numpy as jnp
 
 from repro.compressors import get_compressor
+from repro.configs.ffcz_fields import FieldConfig
 from repro.core.ffcz import FFCz, FFCzConfig
 from repro.core.spectrum import bitrate, power_spectrum_relative_error, psnr, ssnr_spatial
 from repro.data.fields import make_field
 
 
 def main():
-    x = make_field("nyx-like")
-    print(f"field: nyx-like {x.shape} ({x.nbytes/1e6:.1f} MB float32)")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small field + one base compressor (the CI docs leg)")
+    args = ap.parse_args()
 
-    for base_name in ("szlike", "zfplike", "sperrlike"):
+    if args.quick:
+        x = make_field(FieldConfig("quick", (24, 24, 24), "powerlaw", alpha=2.0))
+        bases, max_iters = ("szlike",), 300
+    else:
+        x = make_field("nyx-like")
+        bases, max_iters = ("szlike", "zfplike", "sperrlike"), 1500
+    print(f"field: {'quick' if args.quick else 'nyx-like'} {x.shape} "
+          f"({x.nbytes/1e6:.1f} MB float32)")
+
+    for base_name in bases:
         base = get_compressor(base_name)
-        codec = FFCz(base, FFCzConfig(E_rel=1e-3, Delta_rel=1e-3, max_iters=1500))
+        codec = FFCz(base, FFCzConfig(E_rel=1e-3, Delta_rel=1e-3, max_iters=max_iters))
         xh, blob = codec.roundtrip(x)
         st = blob.stats
         print(f"\n=== base={base_name} ===")
@@ -39,7 +54,8 @@ def main():
 
     # power-spectrum-preserving mode (paper Observation 4)
     codec = FFCz(get_compressor("szlike"),
-                 FFCzConfig(E_rel=1e-3, Delta_rel=None, pspec_rel=1e-3, max_iters=2500))
+                 FFCzConfig(E_rel=1e-3, Delta_rel=None, pspec_rel=1e-3,
+                            max_iters=300 if args.quick else 2500))
     xh, blob = codec.roundtrip(x)
     _, rel = power_spectrum_relative_error(xh, x)
     print("\n=== power-spectrum mode (pspec_rel=0.1%) ===")

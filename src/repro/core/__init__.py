@@ -6,8 +6,12 @@ from repro.core.engine import CorrectionEngine, default_engine
 from repro.core.ffcz import FFCz, FFCzConfig
 from repro.core.pocs import AlternatingProjectionResult, alternating_projection
 from repro.core.spectrum import power_spectrum, psnr, relative_frequency_error, ssnr
+from repro.core.temporal import TemporalCodec, TemporalConfig, TemporalStream
 
 __all__ = [
+    "TemporalCodec",
+    "TemporalConfig",
+    "TemporalStream",
     "DualBounds",
     "power_spectrum_delta",
     "project_fcube",

@@ -100,14 +100,24 @@ def blockwise_correct_with_edits(
     block: int = 4096,
     max_iters: int = 50,
     fft_impl: str = "xla",
+    warm: Optional[jnp.ndarray] = None,
 ):
     """Like :func:`blockwise_correct` but also returns (spat_edits, freq_edits,
     iterations-per-block, converged-per-block) for serialization paths.
-    ``freq_edits`` are per-block rfft half-spectra, shape (n_blocks, block//2+1)."""
+    ``freq_edits`` are per-block rfft half-spectra, shape (n_blocks, block//2+1).
+    ``warm`` optionally seeds each block's loop with a prior edit spectrum of
+    that same layout (see ``pocs.alternating_projection`` ``warm_freq``)."""
     tiles, pad = tile_1d(eps, block)
-    res = jax.vmap(
-        lambda t: alternating_projection(t, E, Delta, max_iters=max_iters, fft_impl=fft_impl)
-    )(tiles)
+    if warm is None:
+        res = jax.vmap(
+            lambda t: alternating_projection(t, E, Delta, max_iters=max_iters, fft_impl=fft_impl)
+        )(tiles)
+    else:
+        res = jax.vmap(
+            lambda t, w: alternating_projection(
+                t, E, Delta, max_iters=max_iters, fft_impl=fft_impl, warm_freq=w
+            )
+        )(tiles, warm)
     corrected = untile_1d(res.eps, eps.shape, pad)
     return corrected, res.spat_edits, res.freq_edits, res.iterations, res.converged
 
@@ -123,16 +133,25 @@ class BatchCorrectionStats:
     block_converged: Any  # (total_blocks,) bool
 
 
-def _pocs_batched(packed, E_blk, D_blk, max_iters, fft_impl="xla"):
-    """Vmapped POCS over a packed (B, block) buffer (the batched backend)."""
+def _pocs_batched(packed, E_blk, D_blk, max_iters, fft_impl="xla", warm=None):
+    """Vmapped POCS over a packed (B, block) buffer (the batched backend).
+
+    ``warm``, when given, is a packed ``(B, block//2+1)`` complex buffer of
+    per-block warm-start spectra aligned with ``packed``'s rows."""
+    if warm is None:
+        return jax.vmap(
+            lambda t, e, d: alternating_projection(
+                t, e, d, max_iters=max_iters, fft_impl=fft_impl
+            )
+        )(packed, E_blk, D_blk)
     return jax.vmap(
-        lambda t, e, d: alternating_projection(
-            t, e, d, max_iters=max_iters, fft_impl=fft_impl
+        lambda t, e, d, w: alternating_projection(
+            t, e, d, max_iters=max_iters, fft_impl=fft_impl, warm_freq=w
         )
-    )(packed, E_blk, D_blk)
+    )(packed, E_blk, D_blk, warm)
 
 
-def _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis, fft_impl="xla"):
+def _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis, fft_impl="xla", warm=None):
     """The batched POCS program under ``shard_map`` over ``mesh[axis]``.
 
     The leading (blocks) axis is sharded; each device runs the vmapped
@@ -149,12 +168,24 @@ def _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis, fft_impl="xla"):
         packed = jnp.concatenate([packed, jnp.zeros((pad, packed.shape[1]), packed.dtype)])
         E_blk = jnp.concatenate([E_blk, jnp.ones((pad,), E_blk.dtype)])
         D_blk = jnp.concatenate([D_blk, jnp.ones((pad,), D_blk.dtype)])
-    res = shard_map(
-        lambda t, e, d: _pocs_batched(t, e, d, max_iters, fft_impl),
-        mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis)),
-        out_specs=P(axis),
-    )(packed, E_blk, D_blk)
+        if warm is not None:
+            # zero warm rows keep the pad blocks exactly feasible (clip of
+            # zero is zero), so they still converge at the first check
+            warm = jnp.concatenate([warm, jnp.zeros((pad, warm.shape[1]), warm.dtype)])
+    if warm is None:
+        res = shard_map(
+            lambda t, e, d: _pocs_batched(t, e, d, max_iters, fft_impl),
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis)),
+            out_specs=P(axis),
+        )(packed, E_blk, D_blk)
+    else:
+        res = shard_map(
+            lambda t, e, d, w: _pocs_batched(t, e, d, max_iters, fft_impl, w),
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(axis)),
+            out_specs=P(axis),
+        )(packed, E_blk, D_blk, warm)
     if pad:
         res = jax.tree.map(lambda a: a[:nb], res)
     return res
@@ -162,7 +193,7 @@ def _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis, fft_impl="xla"):
 
 def _correct_batch_core(
     tensors, E_arr, Delta_arr, block, max_iters, return_edits, return_corrected,
-    backend="batched", mesh=None, axis="data", fft_impl="xla",
+    backend="batched", mesh=None, axis="data", fft_impl="xla", warm=None,
 ):
     """The whole batched correction — pack, vmapped POCS (optionally sharded
     over a mesh axis), unpack, per-instance stats — as ONE device program
@@ -179,10 +210,17 @@ def _correct_batch_core(
     E_blk = E_arr.astype(jnp.float32)[seg]
     D_blk = Delta_arr.astype(jnp.float32)[seg]
 
+    warm_packed = None
+    if warm is not None:
+        # per-tensor warm tiles concatenated to align with packed's rows; a
+        # row-count mismatch fails loudly at the vmap axis check
+        warm_packed = jnp.concatenate(
+            [jnp.asarray(w).astype(jnp.complex64) for w in warm], axis=0
+        )
     if backend == "sharded":
-        res = _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis, fft_impl)
+        res = _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis, fft_impl, warm_packed)
     else:
-        res = _pocs_batched(packed, E_blk, D_blk, max_iters, fft_impl)
+        res = _pocs_batched(packed, E_blk, D_blk, max_iters, fft_impl, warm_packed)
 
     corrected, edits = [], []
     offset = 0
@@ -248,7 +286,7 @@ def pack_batch(tensors: Sequence[Any], block: int, out: Optional[np.ndarray] = N
     donate_argnums=(0,),
 )
 def _packed_pocs_with_stats(
-    packed, E_arr, D_arr, seg, *, n, max_iters, backend="batched", mesh=None,
+    packed, E_arr, D_arr, seg, warm=None, *, n, max_iters, backend="batched", mesh=None,
     axis="data", fft_impl="xla",
 ):
     """The vmapped POCS + per-instance stat reductions on a pre-packed buffer.
@@ -264,9 +302,9 @@ def _packed_pocs_with_stats(
     E_blk = E_arr.astype(jnp.float32)[seg]
     D_blk = D_arr.astype(jnp.float32)[seg]
     if backend == "sharded":
-        res = _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis, fft_impl)
+        res = _pocs_sharded(packed, E_blk, D_blk, max_iters, mesh, axis, fft_impl, warm)
     else:
-        res = _pocs_batched(packed, E_blk, D_blk, max_iters, fft_impl)
+        res = _pocs_batched(packed, E_blk, D_blk, max_iters, fft_impl, warm)
     stats = BatchCorrectionStats(
         iterations=jax.ops.segment_max(res.iterations, seg, num_segments=n),
         converged=jax.ops.segment_min(res.converged.astype(jnp.int32), seg, num_segments=n) == 1,
@@ -286,6 +324,7 @@ def correct_packed(
     mesh: Optional[Any] = None,
     axis: str = "data",
     fft_impl: str = "xla",
+    warm: Optional[Any] = None,
 ):
     """Dispatch the packed POCS program; returns ``(res, stats)`` un-fenced.
 
@@ -302,6 +341,7 @@ def correct_packed(
         _as_bound_array(E, n),
         _as_bound_array(Delta, n),
         seg,
+        None if warm is None else jnp.asarray(warm).astype(jnp.complex64),
         n=n,
         max_iters=max_iters,
         backend=backend,
@@ -347,6 +387,7 @@ def correct_batch(
     mesh: Optional[Any] = None,
     axis: str = "data",
     fft_impl: str = "xla",
+    warm_freq: Optional[Sequence[Any]] = None,
 ):
     """Correct a heterogeneous batch of error tensors in one device program.
 
@@ -376,6 +417,12 @@ def correct_batch(
       fft_impl: POCS transform selector shared by every block (``"xla"`` |
         ``"packed"`` | ``"pallas"``, see :mod:`repro.core.pocs`); identical
         across backends, so backend parity is impl-independent.
+      warm_freq: optional per-tensor warm-start spectra — ``warm_freq[i]`` is
+        a ``(n_blocks_i, block//2+1)`` complex array seeding each of
+        ``tensors[i]``'s blocks with a prior converged edit spectrum
+        (temporal streams pass the previous frame's ``freq_edits`` tiles;
+        see :mod:`repro.core.temporal`).  ``None`` is the bitwise-identical
+        cold start.
 
     Returns ``(corrected, stats)`` — or ``(corrected, edits, stats)`` with
     ``return_edits`` — where ``corrected[i]`` has ``tensors[i]``'s shape and
@@ -397,6 +444,10 @@ def correct_batch(
         )
         return ([], [], stats) if return_edits else ([], stats)
     tensors = tuple(jnp.asarray(t) for t in tensors)
+    if warm_freq is not None:
+        if len(warm_freq) != n:
+            raise ValueError(f"expected {n} per-tensor warm spectra, got {len(warm_freq)}")
+        warm_freq = tuple(jnp.asarray(w) for w in warm_freq)
     impl = _correct_batch_donated if return_corrected else _correct_batch_plain
     corrected, edits, stats = impl(
         tensors,
@@ -410,6 +461,7 @@ def correct_batch(
         mesh=mesh,
         axis=axis,
         fft_impl=fft_impl,
+        warm=warm_freq,
     )
     if return_edits:
         return list(corrected), list(edits), stats

@@ -28,9 +28,14 @@ scaffolding into three explicit stages behind one engine object:
 Clients hold no private copies of this math: :class:`repro.core.ffcz.FFCz`
 is a thin plan/execute/encode client (plus base-compressor I/O and byte
 assembly), and ``checkpoint/codec``, ``serving/kv_compress``,
-``optim/grad_compress`` route their corrections through
-:meth:`CorrectionEngine.correct`.  A new scenario is a new engine client,
-not a fifth pipeline.
+``optim/grad_compress``, and the temporal stream codec
+(:class:`repro.core.temporal.TemporalCodec`, which threads per-frame
+``warm_freq`` spectra into EXECUTE) route their corrections through
+:meth:`CorrectionEngine.correct` / :meth:`CorrectionEngine.execute_field`.
+A new scenario is a new engine client, not a fifth pipeline.
+
+The prose version of this page — stage diagram, backend matrix, parity
+tri-state — is docs/architecture.md; keep the two in sync.
 """
 
 from __future__ import annotations
@@ -186,6 +191,11 @@ class FieldPlan:
     # legacy trajectory (and blob bytes) exactly.
     fft_impl: str = "xla"
     check_every: int = 1
+    # Temporal warm start (ISSUE 8): when True, execute_field applies a
+    # caller-supplied warm_freq spectrum as the loop's initial freq_edits
+    # state (see repro.core.pocs).  False ignores any warm_freq — the
+    # bitwise-identical cold start.
+    warm_start: bool = False
 
     @property
     def delta_scalar(self) -> float:
@@ -371,6 +381,7 @@ def _sharded_field_pocs_fn(
     relax: float,
     fft_impl: str = "xla",
     check_every: int = 1,
+    warm: bool = False,
 ):
     """Compiled sharded whole-field POCS program, cached per (mesh, DistSpec).
 
@@ -385,18 +396,40 @@ def _sharded_field_pocs_fn(
     fspec = dist_fft.freq_partition_spec(len(spec.gshape), ax)
     d_spec = fspec if pointwise else P()
 
-    def run(e_loc, d_loc, E, slack):
-        return _alternating_projection(
-            e_loc,
-            E,
-            d_loc,
-            max_iters=max_iters,
-            relax=relax,
-            check_slack=slack,
-            dist=spec,
-            fft_impl=fft_impl,
-            check_every=check_every,
-        )
+    if warm:
+        # the warm spectrum enters as a local half-spectrum block in the
+        # padded device layout (pad rows zero), like a pointwise Delta grid
+        def run(e_loc, d_loc, E, slack, w_loc):
+            return _alternating_projection(
+                e_loc,
+                E,
+                d_loc,
+                max_iters=max_iters,
+                relax=relax,
+                check_slack=slack,
+                dist=spec,
+                fft_impl=fft_impl,
+                check_every=check_every,
+                warm_freq=w_loc,
+            )
+
+        in_specs = (P(ax), d_spec, P(), P(), fspec)
+    else:
+
+        def run(e_loc, d_loc, E, slack):
+            return _alternating_projection(
+                e_loc,
+                E,
+                d_loc,
+                max_iters=max_iters,
+                relax=relax,
+                check_slack=slack,
+                dist=spec,
+                fft_impl=fft_impl,
+                check_every=check_every,
+            )
+
+        in_specs = (P(ax), d_spec, P(), P())
 
     out_specs = AlternatingProjectionResult(
         eps=P(ax),
@@ -407,7 +440,7 @@ def _sharded_field_pocs_fn(
         final_violations=P(),
     )
     return jax.jit(
-        shard_map(run, mesh=mesh, in_specs=(P(ax), d_spec, P(), P()), out_specs=out_specs)
+        shard_map(run, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     )
 
 
@@ -572,16 +605,19 @@ class CorrectionEngine:
             codec=cfg.codec,
             fft_impl=getattr(cfg, "fft_impl", "xla"),
             check_every=getattr(cfg, "check_every", 1),
+            warm_start=getattr(cfg, "warm_start", False),
         )
 
     def plan_pencils(
         self,
         x32: np.ndarray,
         *,
-        E_rel: float,
-        Delta_rel: float,
+        E_rel: Optional[float] = None,
+        Delta_rel: Optional[float] = None,
         block: int,
         quant_bits: int = DEFAULT_QUANT_BITS,
+        E_abs: Optional[float] = None,
+        Delta_abs: Optional[float] = None,
     ) -> Optional[PencilPlan]:
         """Resolve one tensor's pencil-tiled bounds; None if E underflows.
 
@@ -590,11 +626,27 @@ class CorrectionEngine:
         recompute exactly, so it must not pick up float32-FFT jitter.  The
         cast-noise slack uses per-pencil norms (the noise lands on each
         pencil's local spectrum).
+
+        ``E_abs``/``Delta_abs`` override the relative resolution with
+        already-absolute bounds (each independently): temporal residual
+        frames carry bounds resolved once on the stream's first frame, so
+        re-deriving them from each residual's own range would drift.  An
+        absolute Delta needs no forward FFT at all.
         """
-        E = E_rel * float(np.ptp(x32))
         flat = x32.reshape(-1)
         tiles = np.pad(flat, (0, (-flat.size) % block)).reshape(-1, block)
-        Delta = Delta_rel * float(np.abs(np.fft.rfft(tiles, axis=-1)).max())
+        if E_abs is not None:
+            E = float(E_abs)
+        else:
+            if E_rel is None:
+                raise ValueError("plan_pencils needs E_rel or E_abs")
+            E = E_rel * float(np.ptp(x32))
+        if Delta_abs is not None:
+            Delta = float(Delta_abs)
+        else:
+            if Delta_rel is None:
+                raise ValueError("plan_pencils needs Delta_rel or Delta_abs")
+            Delta = Delta_rel * float(np.abs(np.fft.rfft(tiles, axis=-1)).max())
         E_proj, Delta_proj, Delta, _slack_f = float32_bound_discipline(
             E,
             Delta,
@@ -623,7 +675,12 @@ class CorrectionEngine:
 
     # -- EXECUTE -----------------------------------------------------------
 
-    def execute_field(self, eps0: Union[np.ndarray, ShardedField], plan: FieldPlan) -> FieldResult:
+    def execute_field(
+        self,
+        eps0: Union[np.ndarray, ShardedField],
+        plan: FieldPlan,
+        warm_freq: Optional[np.ndarray] = None,
+    ) -> FieldResult:
         """One jitted device POCS program + the exact float64 polish.
 
         The jitted loop runs in float32 (the TPU perf path, as the paper
@@ -638,11 +695,20 @@ class CorrectionEngine:
         gathers to one device.  The loop trajectory is bitwise identical to
         the single-device program (see :mod:`repro.sharding.dist_fft`), so
         the edit streams — and the blobs built from them — match exactly.
+
+        ``warm_freq`` (complex half-spectrum, the previous stream frame's
+        converged ``FieldResult.freq``) seeds the loop's ``freq_edits``
+        accumulator — consumed only when ``plan.warm_start`` is True, so a
+        cold-configured plan stays bitwise identical whatever the caller
+        passes (the temporal neutrality switch).
         """
-        return self.execute_field_async(eps0, plan).result()
+        return self.execute_field_async(eps0, plan, warm_freq=warm_freq).result()
 
     def execute_field_async(
-        self, eps0: Union[np.ndarray, ShardedField], plan: FieldPlan
+        self,
+        eps0: Union[np.ndarray, ShardedField],
+        plan: FieldPlan,
+        warm_freq: Optional[np.ndarray] = None,
     ) -> FieldExecuteHandle:
         """Dispatch the whole-field POCS program; return before the fence.
 
@@ -655,9 +721,11 @@ class CorrectionEngine:
         raise here; fence-time failures classify inside ``result()``.
         """
         sharded = isinstance(eps0, ShardedField)
+        if not plan.warm_start:
+            warm_freq = None  # neutrality: cold plans never see a warm state
         try:
             if sharded:
-                res = self._pocs_field_sharded(eps0, plan)
+                res = self._pocs_field_sharded(eps0, plan, warm_freq)
             else:
                 res = alternating_projection(
                     jnp.asarray(eps0, dtype=jnp.float32),
@@ -669,6 +737,8 @@ class CorrectionEngine:
                     check_slack=0.5 * plan.slack_f,
                     fft_impl=plan.fft_impl,
                     check_every=plan.check_every,
+                    warm_freq=None if warm_freq is None
+                    else jnp.asarray(warm_freq, dtype=jnp.complex64),
                 )
         except (RuntimeError, MemoryError) as e:
             # device dispatch / allocation failures carry stage + disposition
@@ -724,7 +794,7 @@ class CorrectionEngine:
             final_violations=final_violations,
         )
 
-    def _pocs_field_sharded(self, eps0: ShardedField, plan: FieldPlan):
+    def _pocs_field_sharded(self, eps0: ShardedField, plan: FieldPlan, warm_freq=None):
         """The whole-field POCS while_loop under ``shard_map`` (dist mode)."""
         if plan.use_kernels:
             raise ValueError("use_kernels is not supported for sharded whole fields")
@@ -755,6 +825,14 @@ class CorrectionEngine:
             )
         else:
             delta_op = jnp.float32(plan.Delta_proj)
+        warm_op = None
+        if warm_freq is not None:
+            # same device layout as a pointwise Delta grid: zero-padded to
+            # the local half-spectrum blocks (pad rows stay zero in the loop)
+            warm_op = jax.device_put(
+                eps0.pad_freq_np(np.asarray(warm_freq, dtype=np.complex64)),
+                NamedSharding(mesh, eps0.freq_spec),
+            )
         fn = _sharded_field_pocs_fn(
             mesh,
             eps0.dist_spec,
@@ -763,11 +841,15 @@ class CorrectionEngine:
             plan.relax,
             plan.fft_impl,
             plan.check_every,
+            warm_op is not None,
         )
         # scalar bounds ride as replicated operands (pre-rounded to the f32
         # values the single-device trace uses), so same-shape fields with
         # different bounds share one compiled program
-        return fn(eps0.array, delta_op, np.float32(plan.E_proj), np.float32(0.5 * plan.slack_f))
+        args = (eps0.array, delta_op, np.float32(plan.E_proj), np.float32(0.5 * plan.slack_f))
+        if warm_op is not None:
+            args = args + (warm_op,)
+        return fn(*args)
 
     def correct(
         self,
@@ -779,6 +861,7 @@ class CorrectionEngine:
         return_edits: bool = False,
         return_corrected: bool = True,
         fft_impl: Optional[str] = None,
+        warm_freq: Optional[Sequence[Any]] = None,
     ):
         """Pencil-tiled correction of a heterogeneous batch on this backend.
 
@@ -786,13 +869,17 @@ class CorrectionEngine:
         implements the ``batched`` and ``sharded`` backends); the ``local``
         backend dispatches one program per tensor.  Jit-safe on the batched
         backend, so jitted integrations can call through unchanged.
-        ``fft_impl`` overrides the engine default for this call.
+        ``fft_impl`` overrides the engine default for this call;
+        ``warm_freq`` optionally seeds each tensor's blocks with prior edit
+        spectra (``(n_blocks_i, block//2+1)`` per tensor — the temporal
+        stream path).
         """
         fft_impl = self.fft_impl if fft_impl is None else fft_impl
         try:
             if self.backend == "local":
                 return self._correct_local(
-                    tensors, E, Delta, block, max_iters, return_edits, return_corrected, fft_impl
+                    tensors, E, Delta, block, max_iters, return_edits, return_corrected,
+                    fft_impl, warm_freq,
                 )
             return blockwise.correct_batch(
                 tensors,
@@ -806,6 +893,7 @@ class CorrectionEngine:
                 mesh=self.mesh if self.backend == "sharded" else None,
                 axis=self.axis,
                 fft_impl=fft_impl,
+                warm_freq=warm_freq,
             )
         except (RuntimeError, MemoryError) as e:
             raise classify_exception(e, "execute") from e
@@ -821,6 +909,7 @@ class CorrectionEngine:
         return_corrected: bool = True,
         fft_impl: Optional[str] = None,
         staging: Optional[np.ndarray] = None,
+        warm_freq: Optional[Sequence[Any]] = None,
     ):
         """Dispatch a pencil-batch correction; return a handle before the fence.
 
@@ -853,7 +942,7 @@ class CorrectionEngine:
                 return _FenceHandle(
                     self._correct_local(
                         tensors, E, Delta, block, max_iters, return_edits,
-                        return_corrected, fft_impl,
+                        return_corrected, fft_impl, warm_freq,
                     )
                 )
             except (RuntimeError, MemoryError) as e:
@@ -861,6 +950,11 @@ class CorrectionEngine:
         specs = [(np.asarray(t).shape, np.asarray(t).dtype) for t in tensors]
         try:
             packed, counts, pads = blockwise.pack_batch(tensors, block, out=staging)
+            warm = None
+            if warm_freq is not None:
+                warm = np.concatenate(
+                    [np.asarray(w, dtype=np.complex64) for w in warm_freq], axis=0
+                )
             res, stats = blockwise.correct_packed(
                 packed,
                 counts,
@@ -871,6 +965,7 @@ class CorrectionEngine:
                 mesh=self.mesh if self.backend == "sharded" else None,
                 axis=self.axis,
                 fft_impl=fft_impl,
+                warm=warm,
             )
         except (RuntimeError, MemoryError) as e:
             raise classify_exception(e, "execute") from e
@@ -879,7 +974,8 @@ class CorrectionEngine:
         )
 
     def _correct_local(
-        self, tensors, E, Delta, block, max_iters, return_edits, return_corrected, fft_impl="xla"
+        self, tensors, E, Delta, block, max_iters, return_edits, return_corrected,
+        fft_impl="xla", warm_freq=None,
     ):
         """Per-tensor dispatch (the pre-batching behaviour, kept for
         comparison benches and single-tensor calls).  Bounds go through the
@@ -888,11 +984,15 @@ class CorrectionEngine:
         n = len(tensors)
         Es = blockwise._as_bound_array(E, n)
         Ds = blockwise._as_bound_array(Delta, n)
+        warms = [None] * n if warm_freq is None else list(warm_freq)
+        if len(warms) != n:
+            raise ValueError(f"expected {n} per-tensor warm spectra, got {len(warms)}")
         corrected, edits, it_blocks, conv_blocks, it_t, conv_t = [], [], [], [], [], []
-        for t, e, d in zip(tensors, Es, Ds):
+        for t, e, d, w in zip(tensors, Es, Ds, warms):
             t = jnp.asarray(t)
             corr, spat, freq, iters, conv = blockwise.blockwise_correct_with_edits(
-                t, e, d, block=block, max_iters=max_iters, fft_impl=fft_impl
+                t, e, d, block=block, max_iters=max_iters, fft_impl=fft_impl,
+                warm=None if w is None else jnp.asarray(w),
             )
             if return_corrected:
                 corrected.append(corr.astype(t.dtype))

@@ -109,6 +109,12 @@ class FFCzConfig:
     # K > 1 trades up-to-K-1 late convergence for one reduction (and one
     # psum, in distributed mode) per skipped iteration.
     check_every: int = 1
+    # Temporal warm start (see repro.core.temporal / docs/streaming.md):
+    # when True, execute_field seeds the POCS loop's freq_edits state from a
+    # caller-supplied previous-frame spectrum.  False (default) ignores any
+    # warm state — the bitwise-identical cold start, so non-stream callers
+    # and disabled streams produce byte-identical blobs.
+    warm_start: bool = False
     # Append a per-section CRC32 tail (``FFCC`` marker) to written blobs so
     # bit flips that structural validation cannot see are caught at decode.
     # Off by default: the tail changes the blob bytes, and the default path

@@ -71,6 +71,19 @@ iterations late.  The final iteration before ``max_iters`` always checks, so
 ``final_violations`` stays meaningful.  Opt-in via the plan knob
 (``FFCzConfig.check_every``); bound-conformance gated.
 
+Warm start (``warm_freq``, ISSUE 8): a temporal stream's consecutive frames
+produce highly correlated edit spectra, so the loop can seed its
+``freq_edits`` accumulator from the PREVIOUS frame's converged spectrum
+instead of zero.  The warm state is constructed to preserve the loop
+invariant ``eps == eps0 + IFFT(freq_edits) + spat_edits`` exactly: the warm
+spectrum is applied through the loop's own inverse transform and the result
+is re-projected onto the s-cube (accumulating into ``spat_edits``) before
+iteration 0, so a warm-started loop that converges immediately still
+satisfies BOTH bounds by construction.  ``warm_freq=None`` (the default)
+builds the exact legacy zero state — the trajectory, and therefore the edit
+streams and blob bytes, are bitwise identical to pre-warm-start writers
+(gated by tests/test_temporal.py).  See docs/streaming.md.
+
 Distributed pencil mode (``dist=DistSpec(...)``): the loop body runs on a
 *local slab* inside a ``shard_map`` region, with the FFT pair replaced by
 the pencil-decomposed transforms of :mod:`repro.sharding.dist_fft`
@@ -132,6 +145,7 @@ def _alternating_projection(
     dist: Optional[Any] = None,
     fft_impl: str = "xla",
     check_every: int = 1,
+    warm_freq: Optional[Any] = None,
 ) -> AlternatingProjectionResult:
     """Run Alg. 1 from an initial spatial error vector ``eps0``.
 
@@ -174,6 +188,14 @@ def _alternating_projection(
       check_every: run the convergence-check reduction every K-th iteration
         (and on the final one) instead of every iteration; 1 (default)
         preserves the exact legacy trajectory.
+      warm_freq: optional complex seed for the ``freq_edits`` accumulator
+        (``freq_shape`` layout: the rfft half-spectrum, the full spectrum
+        when ``use_rfft=False``, or the local half-spectrum block in dist
+        mode).  Applied through the loop's own inverse transform and
+        s-cube-projected before iteration 0 so the loop invariant
+        ``eps == eps0 + IFFT(freq_edits) + spat_edits`` holds exactly (see
+        module docstring).  ``None`` (default) is the bitwise-identical
+        legacy cold start.
 
     Returns an :class:`AlternatingProjectionResult` pytree.
     """
@@ -375,14 +397,40 @@ def _alternating_projection(
         eps_next = jnp.where(done, eps, eps_s)
         return (eps_next, spat_edits, freq_edits, it + 1, done, viol)
 
-    state0 = (
-        eps0,
-        jnp.zeros_like(eps0),
-        jnp.zeros(freq_shape, dtype=cdtype),
-        jnp.int32(0),
-        jnp.bool_(False),
-        jnp.int32(-1),
-    )
+    if warm_freq is None:
+        state0 = (
+            eps0,
+            jnp.zeros_like(eps0),
+            jnp.zeros(freq_shape, dtype=cdtype),
+            jnp.int32(0),
+            jnp.bool_(False),
+            jnp.int32(-1),
+        )
+    else:
+        warm = jnp.asarray(warm_freq).astype(cdtype)
+        if warm.shape != freq_shape:
+            raise ValueError(
+                f"warm_freq must have the loop's frequency-state shape "
+                f"{freq_shape}, got {warm.shape}"
+            )
+        # Seed freq_edits with the previous frame's converged spectrum, then
+        # restore the loop invariant: eps must equal
+        # eps0 + IFFT(freq_edits) + spat_edits AND sit inside the s-cube
+        # (the loop's convergence check only tests the f-cube, so skipping
+        # this projection could declare a warm start converged with eps
+        # outside the spatial bound).  `inv` is the loop's own inverse, so
+        # this composes with packed/pallas transforms and dist-mode local
+        # blocks (zero pad rows map to zero: linearity + clip(0) == 0).
+        eps_w = eps0 + inv(warm)
+        eps_s0, s_disp0 = project_scube(eps_w, E)
+        state0 = (
+            eps_s0.astype(eps0.dtype),
+            s_disp0.astype(eps0.dtype),
+            warm,
+            jnp.int32(0),
+            jnp.bool_(False),
+            jnp.int32(-1),
+        )
     eps, spat_edits, freq_edits, it, done, viol = jax.lax.while_loop(cond, body, state0)
     # Iteration accounting matches Table III: the terminating convergence
     # check counts as an iteration (pure-containment cases report 1).

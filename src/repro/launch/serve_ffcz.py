@@ -52,8 +52,8 @@ def add_service_args(ap: argparse.ArgumentParser) -> None:
 def add_workload_args(ap: argparse.ArgumentParser) -> None:
     """Synthetic-workload flags (shared with benchmarks/bench_serve.py)."""
     ap.add_argument("--field-size", type=int, default=24, help="whole-field edge length")
-    ap.add_argument("--e-rel", type=float, default=1e-3)
-    ap.add_argument("--delta-rel", type=float, default=1e-3)
+    ap.add_argument("--e-rel", type=float, default=1e-3, help="relative spatial bound")
+    ap.add_argument("--delta-rel", type=float, default=1e-3, help="relative spectral bound")
     ap.add_argument("--crc", action="store_true", help="append CRC tails to field blobs")
     ap.add_argument("--pencil-frac", type=float, default=0.5,
                     help="fraction of compressions taking the blockwise path")
@@ -70,6 +70,29 @@ def add_fault_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--slow-s", type=float, default=0.0, help="injected slowness (seconds)")
     ap.add_argument("--max-per-site", type=int, default=2,
                     help="fire cap per (fault site, request)")
+
+
+def flag_table() -> str:
+    """Markdown table of every flag the shared ``add_*_args`` builders define.
+
+    docs/serving.md embeds this output between its ``FLAG_TABLE`` markers and
+    ``ci/check_docs.py`` regenerates/diffs it, so the documented flag
+    reference cannot drift from the argparse definitions.  Defaults are the
+    builders' own — a changed default is a docs change by construction.
+    """
+    rows = [
+        "| flag | group | default | meaning |",
+        "| --- | --- | --- | --- |",
+    ]
+    for build in (add_service_args, add_workload_args, add_fault_args):
+        group = build.__name__.removeprefix("add_").removesuffix("_args")
+        ap = argparse.ArgumentParser(add_help=False)
+        build(ap)
+        for act in ap._actions:
+            flag = ", ".join(f"`{s}`" for s in act.option_strings)
+            default = "off" if act.const is True else f"`{act.default}`"
+            rows.append(f"| {flag} | {group} | {default} | {act.help or ''} |")
+    return "\n".join(rows)
 
 
 def build_injector(args) -> Optional[FaultInjector]:
@@ -127,7 +150,16 @@ def submit_mixed(svc: FFCzService, rng: np.random.Generator, args, n: int) -> Li
 
 
 def main():
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=(
+            "Full flag reference (with the serving error taxonomy and "
+            "degradation ladder): docs/serving.md — its flag table is "
+            "generated from this module's add_*_args builders by "
+            "ci/check_docs.py, so it cannot drift from what --help shows."
+        ),
+    )
     ap.add_argument("--requests", type=int, default=16, help="total requests to generate")
     add_service_args(ap)
     add_workload_args(ap)

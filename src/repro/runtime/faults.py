@@ -42,6 +42,9 @@ exactly the "transient" contract the retry ladder is built for.
 All mutable state (per-request streams, fire counts) is guarded by a lock:
 the pipelined service fires sites from both the scheduler thread and the
 encode worker thread.
+
+The service-side view of these sites (which stage fires what, and how each
+classified error walks the degradation ladder) is docs/serving.md.
 """
 
 from __future__ import annotations

@@ -9,11 +9,17 @@ with a request queue admitting heterogeneous (shape, dtype, bound) work:
                           queued tensors run as ONE packed ``(B, block)``
                           correction on the donated batched buffer, each with
                           its own resolved (E, Delta)
-  decompress              hardened decode of service or FFCz blobs
+  temporal stream         one FFCS sequence (predictor residuals + POCS warm
+                          start, :class:`~repro.core.temporal.TemporalCodec`)
+                          compressed as ONE unit — the frame chain is
+                          sequential, so per-stream frame order is preserved
+                          by construction while other units still overlap
+  decompress              hardened decode of service pencil blobs, FFCS
+                          streams, or FFCz blobs
 
 Execution is a two-stage software pipeline (``pipeline_depth``, default 2).
-Each unit of work — a pencil bucket, one field, one decode — is split at the
-device fence:
+Each unit of work — a pencil bucket, one field, one stream, one decode — is
+split at the device fence:
 
   FRONT (scheduler thread)   per-request PLAN + base codec, pack the bucket
                              into a cached ``(B, block)`` host staging buffer,
@@ -61,22 +67,23 @@ A :class:`~repro.runtime.faults.FaultInjector` can be threaded through every
 stage boundary for deterministic chaos testing (tests/test_faults.py); its
 per-request substreams make the injected faults identical in serial and
 pipelined mode.
+
+The prose version of this page — request kinds, error taxonomy, ladder,
+pipeline diagram, and the generated flag reference — is docs/serving.md
+(stream semantics: docs/streaming.md); keep them in sync.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
-import struct
 import threading
 import time
-import zlib
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.edits import EncodedEdits, decode_edits
 from repro.core.engine import CorrectionEngine, default_engine
 from repro.core.errors import (
     DeadlineExceeded,
@@ -87,6 +94,18 @@ from repro.core.errors import (
     classify_exception,
 )
 from repro.core.ffcz import FFCz, FFCzBlob, FFCzConfig
+
+# The pencil envelope (FFSB) lives in repro.core.temporal (the temporal codec
+# shares it for pencil-mode stream frames); re-exported here because the
+# service mints the format and callers decode through this module.
+from repro.core.temporal import (  # noqa: F401 - decode_pencil_blob re-exported
+    _PENCIL_MAGIC,
+    _STREAM_MAGIC,
+    TemporalCodec,
+    TemporalConfig,
+    _pencil_blob,
+    decode_pencil_blob,
+)
 
 __all__ = [
     "ServiceConfig",
@@ -99,14 +118,6 @@ __all__ = [
 # fft_impl degradation rungs: each key falls back to its value when the POCS
 # transform keeps failing (or won't converge); "xla" is the floor.
 _LADDER = {"pallas": "packed", "packed": "xla"}
-
-# service pencil-blob envelope: magic, version, <ddIB> E/Delta/block/ndim,
-# ndim * u64 shape, <QQQ> section lengths, sections, trailing u32 CRC32 of
-# every preceding byte.  A new wire format (no legacy writers), so the CRC
-# is unconditional.
-_PENCIL_MAGIC = b"FFSB"
-_PENCIL_VERSION = 1
-_PENCIL_HEADER = "<ddIB"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,9 +168,11 @@ class ServiceResponse:
 @dataclasses.dataclass
 class _Request:
     uid: str
-    kind: str  # "field" | "pencils" | "decompress"
+    kind: str  # "field" | "pencils" | "stream" | "decompress"
     payload: Any
-    cfg: Any  # FFCzConfig (field) | (E_rel, Delta_rel) (pencils) | None
+    # FFCzConfig (field) | (E_rel, Delta_rel) (pencils)
+    # | (FFCzConfig, TemporalConfig) (stream) | None (decompress)
+    cfg: Any
     deadline_s: float
     seq: int = 0  # submission order (drain() response ordering)
     t0: float = 0.0
@@ -185,6 +198,7 @@ class _Staged:
                   ``exc`` (one of the two, or neither when ``work`` is empty)
       field       ``plan`` / ``base_blob`` / ``eps0`` plus the attempt-1
                   dispatch, or ``done`` when the request rejected at front
+      stream      nothing staged — the frame chain is sequential, all BACK
       decompress  nothing staged — decode is pure host work, all BACK
     """
 
@@ -326,13 +340,47 @@ class FFCzService:
             )
         )
 
+    def submit_stream(
+        self,
+        frames: Sequence[np.ndarray],
+        cfg: FFCzConfig,
+        stream: TemporalConfig = TemporalConfig(),
+        uid: Optional[str] = None,
+        deadline_s: Optional[float] = None,
+    ) -> str:
+        """Queue one temporal sequence for FFCS stream compression.
+
+        The whole sequence is ONE unit of work: frames of a stream are a
+        sequential dependency chain (residuals against decoded history, POCS
+        warm starts), so per-stream frame order is preserved trivially while
+        the pipeline still overlaps this stream's encode with *other* units'
+        device work.  The response payload is the ``FFCS`` container; the
+        per-frame retry machinery applies inside the unit (a transient frame
+        failure re-runs that frame, not the stream).
+        """
+        frames = [np.asarray(f) for f in frames]
+        if not frames:
+            raise ValueError("cannot compress an empty stream")
+        if any(f.size == 0 for f in frames):
+            raise ValueError("cannot compress an empty frame")
+        return self._admit(
+            _Request(
+                uid=self._uid(uid),
+                kind="stream",
+                payload=frames,
+                cfg=(cfg, stream),
+                deadline_s=self.config.deadline_s if deadline_s is None else deadline_s,
+            )
+        )
+
     def submit_decompress(
         self,
         blob: bytes,
         uid: Optional[str] = None,
         deadline_s: Optional[float] = None,
     ) -> str:
-        """Queue a decode of service pencil bytes or a whole-field FFCz blob."""
+        """Queue a decode of service pencil bytes, an FFCS stream, or a
+        whole-field FFCz blob (stream decodes return the stacked frames)."""
         return self._admit(
             _Request(
                 uid=self._uid(uid),
@@ -549,7 +597,11 @@ class FFCzService:
                 return self._front_pencils(unit)
             if kind == "field":
                 return self._front_field(unit[0])
-            return _Staged(kind="decompress", unit=unit)
+            # stream: the frame chain is strictly sequential (each frame's
+            # predictor and warm state depend on the previous frame's
+            # results), so there is nothing to pre-dispatch — the whole unit
+            # runs in the back half, overlapping OTHER units at depth >= 2
+            return _Staged(kind=kind, unit=unit)
         finally:
             self._tick("front_s", t0)
 
@@ -560,6 +612,12 @@ class FFCzService:
             return self._back_pencils(staged)
         if staged.kind == "field":
             return [self._back_field(staged)]
+        if staged.kind == "stream":
+            t0 = self._clock()
+            try:
+                return [self._run_stream(staged.unit[0])]
+            finally:
+                self._tick("execute_s", t0)
         t0 = self._clock()
         try:
             return [self._run_decompress(staged.unit[0])]
@@ -867,12 +925,49 @@ class FFCzService:
             self._tick("encode_s", t0)
         return out
 
+    # -- temporal stream path ----------------------------------------------
+
+    def _run_stream(self, req: _Request) -> ServiceResponse:
+        """Compress one temporal sequence into an FFCS container.
+
+        Runs entirely in the back half: frame *t*'s predictor input and
+        warm-start spectrum come from frame *t-1*'s results, so the chain
+        cannot be split at the device fence.  Each frame runs under the
+        per-request retry machinery (``StreamEncoder.add_frame`` mutates
+        encoder state only after the frame fully succeeds, so a retried
+        frame re-runs cleanly), with the standard codec/dispatch/oom fault
+        sites fired per frame.
+        """
+        try:
+            cfg, stream_cfg = req.cfg
+            codec = TemporalCodec(self.base, cfg, stream=stream_cfg, engine=self.engine)
+            enc = codec.open_stream()
+            for frame in req.payload:
+                self._check_deadline(req)
+
+                def _frame(f=frame):
+                    self._fire("codec", req.uid)
+                    self._fire("dispatch", req.uid)
+                    self._fire("oom", req.uid)
+                    return enc.add_frame(f)
+
+                self._attempt(req, "execute", _frame)
+            req.converged = all(s["converged"] for s in enc.frame_stats)
+            return self._complete(req, enc.finish())
+        except FFCzError as err:
+            return self._reject(req, err)
+        except Exception as e:  # noqa: BLE001
+            return self._reject(req, classify_exception(e, "execute"))
+
     # -- decode path -------------------------------------------------------
 
     def _run_decompress(self, req: _Request) -> ServiceResponse:
         try:
             self._check_deadline(req)
             data: bytes = req.payload
+            if data[:4] == _STREAM_MAGIC:
+                codec = TemporalCodec(self.base, FFCzConfig(), engine=self.engine)
+                return self._complete(req, np.stack(codec.decompress_stream(data)))
             if data[:4] == _PENCIL_MAGIC:
                 return self._complete(req, decode_pencil_blob(data, self.base))
             # decode consumes no bound config — the blob carries its bounds
@@ -883,64 +978,3 @@ class FFCzService:
         except Exception as e:  # noqa: BLE001
             return self._reject(req, classify_exception(e, "decode"))
 
-
-# -- pencil wire format ----------------------------------------------------
-
-
-def _pencil_blob(shape, base_blob: bytes, se, fe, plan, block: int) -> bytes:
-    se_b, fe_b = se.to_bytes(), fe.to_bytes()
-    out = _PENCIL_MAGIC + struct.pack("<B", _PENCIL_VERSION)
-    out += struct.pack(_PENCIL_HEADER, plan.E, plan.Delta, block, len(shape))
-    out += struct.pack(f"<{len(shape)}Q", *shape)
-    out += struct.pack("<QQQ", len(base_blob), len(se_b), len(fe_b))
-    out += base_blob + se_b + fe_b
-    return out + struct.pack("<I", zlib.crc32(out))
-
-
-def decode_pencil_blob(data: bytes, base: Any) -> np.ndarray:
-    """Hardened decode of the service pencil envelope (``FFSB``).
-
-    Every malformation — bad magic/version, truncation, section overrun,
-    CRC mismatch, codec garbage — raises :class:`BlobCorruptError`.
-    """
-    try:
-        if data[:4] != _PENCIL_MAGIC:
-            raise BlobCorruptError("not an FFCz service pencil blob: bad magic")
-        if len(data) < 9 or data[4] != _PENCIL_VERSION:
-            raise BlobCorruptError(
-                f"unsupported service pencil blob version {data[4] if len(data) > 4 else '?'}"
-            )
-        if len(data) < 4 + 1 + 4:
-            raise BlobCorruptError("truncated service pencil blob")
-        body, (crc,) = data[:-4], struct.unpack_from("<I", data, len(data) - 4)
-        if zlib.crc32(body) != crc:
-            raise BlobCorruptError("corrupt service pencil blob: CRC mismatch")
-        off = 5
-        E, Delta, block, ndim = struct.unpack_from(_PENCIL_HEADER, body, off)
-        off += struct.calcsize(_PENCIL_HEADER)
-        if ndim > 16:
-            raise BlobCorruptError(f"corrupt service pencil blob: implausible rank {ndim}")
-        shape = struct.unpack_from(f"<{ndim}Q", body, off)
-        off += 8 * ndim
-        nb, ns, nf = struct.unpack_from("<QQQ", body, off)
-        off += struct.calcsize("<QQQ")
-        if len(body) != off + nb + ns + nf:
-            raise BlobCorruptError(
-                f"corrupt service pencil blob: {len(body)} bytes, sections want {off + nb + ns + nf}"
-            )
-        base_blob = body[off : off + nb]
-        se = EncodedEdits.from_bytes(body[off + nb : off + nb + ns])
-        fe = EncodedEdits.from_bytes(body[off + nb + ns : off + nb + ns + nf])
-        x_hat = np.asarray(base.decompress(base_blob), dtype=np.float32)
-        spat = decode_edits(se, E)
-        freq = decode_edits(fe, Delta)
-        complete = spat + np.fft.irfft(freq, n=block, axis=-1)
-        size = int(np.prod(shape)) if shape else 1
-        x = x_hat.astype(np.float64).reshape(-1) + complete.reshape(-1)[:size]
-        return x.reshape(shape).astype(np.float32)
-    except FFCzError:
-        raise
-    except Exception as e:  # noqa: BLE001 - untrusted bytes
-        raise BlobCorruptError(
-            f"corrupt service pencil blob: {type(e).__name__}: {e}", cause=e
-        ) from e

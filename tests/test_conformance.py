@@ -317,3 +317,68 @@ class TestRandomizedConformance:
         parity = classify_parity(shape, n_dev)
         pow2 = all(n & (n - 1) == 0 for n in shape[:-1])
         assert parity == ("bitwise" if pow2 else "bound")
+
+
+# ---------------------------------------------------------------------------
+# temporal stream conformance (ISSUE 8)
+
+
+class TestStreamConformance:
+    """The stream-level dual-bound claim: EVERY frame of an FFCS round trip
+    — keyframe and residual alike, warm-started or not — holds the spatial
+    and spectral bounds the container header claims, rechecked in float64."""
+
+    def _frames(self, n, shape, seed=0):
+        rng = np.random.default_rng(seed)
+        base = _field(shape, seed=seed)
+        mode = np.cos(np.linspace(0, 2 * np.pi, base.size)).reshape(shape)
+        return [
+            np.ascontiguousarray(
+                base + 0.1 * t * mode + 0.01 * rng.standard_normal(shape), np.float32
+            )
+            for t in range(n)
+        ]
+
+    @pytest.mark.parametrize("warm", [False, True], ids=["cold", "warm"])
+    @pytest.mark.parametrize("shape", [(15, 14, 10), (9, 11)], ids=str)
+    def test_field_stream_every_frame_conforms(self, shape, warm):
+        from repro.core.temporal import TemporalCodec, TemporalConfig, TemporalStream
+
+        frames = self._frames(7, shape, seed=sum(shape))
+        codec = TemporalCodec(
+            get_compressor("szlike"),
+            FFCzConfig(E_rel=1e-3, Delta_rel=1e-3, max_iters=600, warm_start=warm),
+            TemporalConfig(mode="field", keyframe_interval=3),
+        )
+        data = codec.compress_stream(frames)
+        s = TemporalStream.from_bytes(data)
+        for t, (x, d) in enumerate(zip(frames, codec.decompress_stream(data))):
+            eps = d.astype(np.float64) - x.astype(np.float64)
+            assert np.abs(eps).max() <= s.E, (t, s.is_keyframe(t))
+            spec = np.fft.rfftn(eps)
+            assert np.abs(spec.real).max() <= s.Delta, (t, s.is_keyframe(t))
+            assert np.abs(spec.imag).max() <= s.Delta, (t, s.is_keyframe(t))
+
+    @pytest.mark.parametrize("predictor", ["identity", "linear"])
+    def test_pencil_stream_every_frame_conforms(self, predictor):
+        """EEG-style channels x time routing: block=0 makes one pencil per
+        channel row, so the per-tile spectral recheck needs no tail pad."""
+        from repro.core.temporal import TemporalCodec, TemporalConfig, TemporalStream
+
+        shape = (12, 64)
+        frames = self._frames(7, shape, seed=21)
+        codec = TemporalCodec(
+            get_compressor("szlike"),
+            FFCzConfig(E_rel=1e-3, Delta_rel=1e-3, max_iters=600, warm_start=True),
+            TemporalConfig(mode="pencils", predictor=predictor, keyframe_interval=3),
+        )
+        data = codec.compress_stream(frames)
+        s = TemporalStream.from_bytes(data)
+        assert s.block == shape[-1]
+        for t, (x, d) in enumerate(zip(frames, codec.decompress_stream(data))):
+            eps = d.astype(np.float64) - x.astype(np.float64)
+            assert np.abs(eps).max() <= s.E, (t, s.is_keyframe(t))
+            tiles = eps.reshape(-1, s.block)
+            spec = np.fft.rfft(tiles, axis=-1)
+            assert np.abs(spec.real).max() <= s.Delta, (t, s.is_keyframe(t))
+            assert np.abs(spec.imag).max() <= s.Delta, (t, s.is_keyframe(t))
