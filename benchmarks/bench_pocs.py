@@ -102,6 +102,52 @@ def bench_single(shape, max_iters: int, repeat: int):
     return rows, speedup
 
 
+def bench_roi(shape, max_iters: int, repeat: int):
+    """Scalar-E vs pointwise ROI-grid s-cube clip, identical forced iterations.
+
+    The ROI bound path (ISSUE 9) swaps the scalar ``clip(eps, -E, E)`` for a
+    broadcast clip against a field-shaped bound grid, plus one cold-start
+    pre-projection before iteration 0.  Both are elementwise O(N) against the
+    loop's O(N log N) FFTs, so the ratio should sit near 1.0 — the row exists
+    to catch a pointwise-clip implementation accidentally falling off the
+    fused path (the CI floor is a collapse guard, not a speedup claim).
+    """
+    eps0_np, E, Delta_np = _adversarial_field(shape)
+    eps0 = jnp.asarray(eps0_np)
+    Delta = jnp.asarray(Delta_np)
+    E_grid_np = np.full(shape, E, dtype=np.float32)
+    sl = tuple(slice(0, n // 4) for n in shape)
+    E_grid_np[sl] = 0.5 * E  # a corner-block ROI with a 2x tighter bound
+    E_grid = jnp.asarray(E_grid_np)
+
+    for bound in (E, E_grid):
+        res = alternating_projection(eps0, bound, Delta, max_iters=max_iters)
+        iters = int(res.iterations)
+        assert iters == max_iters, f"hit feasibility at {iters} < {max_iters}; retune the bench"
+
+    t_u, t_r = _bench_pair(
+        lambda: alternating_projection(eps0, E, Delta, max_iters=max_iters).eps,
+        lambda: alternating_projection(eps0, E_grid, Delta, max_iters=max_iters).eps,
+        repeat,
+    )
+    speedup = t_u / t_r
+    mb = eps0.size * 4 / 1e6
+    rows = [
+        {
+            "bench": "single",
+            "path": "roi-vs-uniform",
+            "shape": list(shape),
+            "iterations": max_iters,
+            "wall_s": t_r,
+            "wall_s_uniform": t_u,
+            "iters_per_s": max_iters / t_r,
+            "mb_per_s": mb * max_iters / t_r,
+            "speedup_roi_vs_uniform": speedup,
+        }
+    ]
+    return rows, speedup
+
+
 def bench_batched(n_tensors: int, size: int, block: int, max_iters: int, repeat: int):
     """Per-tensor dispatch loop vs one batched correct_batch device program."""
     rng = np.random.default_rng(1)
@@ -579,6 +625,10 @@ def main():
         r, s = bench_single(shape, max_iters, repeat)
         rows += r
         print(f"single {shape}: rfft vs complex speedup = {s:.2f}x")
+    for shape in shapes:
+        r, s = bench_roi(shape, max_iters, repeat)
+        rows += r
+        print(f"single {shape}: roi-grid vs uniform-E clip ratio = {s:.2f}x")
     for shape in shapes:
         r, sp, spl = bench_fft_impls(shape, max_iters, repeat)
         rows += r

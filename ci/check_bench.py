@@ -50,6 +50,12 @@ RECORDED = os.path.join(ROOT, "BENCH_pocs.json")
 #   engine_field           recorded ~1.15-2.07x  -> bar 1.05
 #   batched                recorded ~1.10-1.26x  -> bar 0.85 (CPU is
 #                          ~parity by design; the row guards collapse)
+#   single/roi-vs-uniform  the ROI bound grid (ISSUE 9) swaps a scalar clip
+#                          for a broadcast pointwise clip — elementwise O(N)
+#                          against the loop's FFTs, so the ratio sits near
+#                          1.0; bar 0.5 is a collapse guard (a pointwise
+#                          clip falling off the fused path), not a speedup
+#                          claim
 #   stream/warm-vs-cold    the ISSUE 8 acceptance floor: warm-starting POCS
 #                          from the previous frame's converged spectrum must
 #                          cut mean iterations >= 1.2x on a coherent
@@ -64,6 +70,7 @@ THRESHOLDS = {
         ("speedup_packed_vs_xla", 1.15, [512, 512]),
         ("speedup_packed_vs_xla", 1.0, None),
     ],
+    ("single", "roi-vs-uniform"): [("speedup_roi_vs_uniform", 0.5, None)],
     ("engine_field", "engine-device"): [("speedup_engine_vs_host", 1.05, None)],
     ("batched", "correct_batch"): [("speedup_batched_vs_loop", 0.85, None)],
     ("stream", "warm-vs-cold"): [("iter_reduction_warm_vs_cold", 1.2, None)],

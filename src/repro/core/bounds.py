@@ -15,6 +15,8 @@ from typing import Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import InfeasibleBound
+
 ArrayLike = Union[float, np.ndarray, jnp.ndarray]
 
 
@@ -49,6 +51,11 @@ def resolve_bounds(
     Relative spatial bound follows the SZ convention: ``E = E_rel * range(x)``.
     Relative frequency bound follows the paper's evaluation scheme:
     ``Delta = Delta_rel * max_k |X_k|`` where ``X = FFT(x)``.
+
+    A constant field has ``range(x) == 0``, so ``E_rel`` resolves to an
+    empty spatial cube — a structured :class:`InfeasibleBound` names that
+    cause here instead of letting a cryptic representability error surface
+    later in the plan stage.
     """
     if (E_abs is None) == (E_rel is None):
         raise ValueError("exactly one of E_abs / E_rel required")
@@ -56,6 +63,13 @@ def resolve_bounds(
         raise ValueError("exactly one of Delta_abs / Delta_rel required")
     if E_abs is None:
         rng = jnp.max(x) - jnp.min(x)
+        if float(rng) == 0.0:
+            raise InfeasibleBound(
+                f"E_rel={float(E_rel):g} on a constant field: range(x) == 0 "
+                "resolves the spatial bound to E = 0 (an empty s-cube); pass "
+                "E_abs for constant fields",
+                stage="plan",
+            )
         E_abs = E_rel * rng
     if Delta_abs is None:
         if X is None:
@@ -110,3 +124,35 @@ def power_spectrum_delta_rfft(X_half: jnp.ndarray, rel: float, floor: float = 0.
     the rFFT POCS fast path consumes directly.
     """
     return power_spectrum_delta(X_half, rel, floor=floor)
+
+
+def resolve_roi_bound_grid(E_roi, E_global: float, shape, scale: float = 0.1) -> np.ndarray:
+    """Resolve a spatially varying ROI bound into a per-point ``E_n`` grid.
+
+    ``E_roi`` is either
+
+    * a **boolean mask** — ``True`` marks region-of-interest points, which
+      get the tighter bound ``E_global * scale``; ``False`` is background
+      (the global ``E``), or
+    * a **float grid** of per-point absolute bounds — entries ``> 0`` are
+      used directly (clamped to ``min(value, E_global)``: ROI bounds only
+      ever *tighten*), entries ``<= 0`` mean background.
+
+    The returned grid is float32 (the exact per-point values the blob
+    stores and the s-cube clip consumes), shaped like the field.  Because
+    every entry is ``<= E_global``, the scalar header ``E`` remains a valid
+    global upper bound for readers that ignore the grid.
+    """
+    grid = np.asarray(E_roi)
+    if grid.shape != tuple(shape):
+        raise ValueError(
+            f"E_roi shape {grid.shape} must match the field shape {tuple(shape)}"
+        )
+    if not 0.0 < scale <= 1.0:
+        raise ValueError(f"E_roi_scale must be in (0, 1], got {scale}")
+    if grid.dtype == np.bool_:
+        out = np.where(grid, E_global * scale, E_global)
+    else:
+        vals = grid.astype(np.float64)
+        out = np.where(vals > 0, np.minimum(vals, E_global), E_global)
+    return np.asarray(out, dtype=np.float32)

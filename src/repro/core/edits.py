@@ -81,9 +81,18 @@ class EncodedEdits:
         except struct.error as e:
             raise BlobCorruptError(f"truncated edit stream header: {e}", cause=e) from e
         off += 8 * ndim
-        if len(data) < off + n_flags + n_payload:
+        end = off + n_flags + n_payload
+        if len(data) < end:
             raise BlobCorruptError(
-                f"truncated edit stream: {len(data)} bytes, sections want {off + n_flags + n_payload}"
+                f"truncated edit stream: {len(data)} bytes, sections want {end}"
+            )
+        if len(data) > end:
+            # every caller passes an exactly-sized slice (the container's
+            # section table delimits the stream), so surplus bytes mean the
+            # table and the stream disagree — corruption, not padding
+            raise BlobCorruptError(
+                f"corrupt edit stream: {len(data) - end} trailing byte(s) past "
+                "the declared sections"
             )
         flags = data[off : off + n_flags]
         payload = data[off + n_flags : off + n_flags + n_payload]

@@ -52,7 +52,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.coding.quantize import DEFAULT_QUANT_BITS
 from repro.core import blockwise
-from repro.core.bounds import power_spectrum_delta_rfft, resolve_bounds
+from repro.core.bounds import power_spectrum_delta_rfft, resolve_bounds, resolve_roi_bound_grid
 from repro.core.errors import FFCzError, InfeasibleBound, classify_exception
 from repro.core.cubes import rfft_pair_weights
 from repro.core.edits import EncodedEdits, encode_edits
@@ -196,6 +196,17 @@ class FieldPlan:
     # state (see repro.core.pocs).  False ignores any warm_freq — the
     # bitwise-identical cold start.
     warm_start: bool = False
+    # ROI bounds (ISSUE 9): per-point spatial bound grid resolved from
+    # FFCzConfig.E_roi (float32, field-shaped, every entry <= E) and its
+    # disciplined projection twin.  None keeps the uniform-E paths (and
+    # blob bytes) exactly as before.
+    E_grid: Optional[np.ndarray] = None
+    E_grid_proj: Optional[np.ndarray] = None
+
+    @property
+    def roi(self) -> bool:
+        """True when the plan carries a per-point spatial bound grid."""
+        return self.E_grid is not None
 
     @property
     def delta_scalar(self) -> float:
@@ -207,6 +218,12 @@ class FieldPlan:
         if not self.pointwise:
             return None
         return np.asarray(self.Delta, dtype=np.float32).tobytes()
+
+    def roi_bytes(self) -> Optional[bytes]:
+        """float32 spatial E_n grid for the blob's FFCR section, or None."""
+        if self.E_grid is None:
+            return None
+        return np.asarray(self.E_grid, dtype=np.float32).tobytes()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -382,6 +399,7 @@ def _sharded_field_pocs_fn(
     fft_impl: str = "xla",
     check_every: int = 1,
     warm: bool = False,
+    roi: bool = False,
 ):
     """Compiled sharded whole-field POCS program, cached per (mesh, DistSpec).
 
@@ -390,11 +408,14 @@ def _sharded_field_pocs_fn(
     instead of retracing — the whole-field analogue of ``_pencil_fft_fn``.
     Arrays cross the boundary in the PADDED device layout; slab-pad rows are
     exactly zero and stay zero through the loop (see
-    :mod:`repro.sharding.dist_fft`).
+    :mod:`repro.sharding.dist_fft`).  ``roi`` switches the spatial bound
+    operand from a replicated scalar to a slab-sharded per-point grid (padded
+    with the background bound so pad rows stay at zero through the clip).
     """
     ax = spec.axis_name
     fspec = dist_fft.freq_partition_spec(len(spec.gshape), ax)
     d_spec = fspec if pointwise else P()
+    e_spec = P(ax) if roi else P()
 
     if warm:
         # the warm spectrum enters as a local half-spectrum block in the
@@ -413,7 +434,7 @@ def _sharded_field_pocs_fn(
                 warm_freq=w_loc,
             )
 
-        in_specs = (P(ax), d_spec, P(), P(), fspec)
+        in_specs = (P(ax), d_spec, e_spec, P(), fspec)
     else:
 
         def run(e_loc, d_loc, E, slack):
@@ -429,7 +450,7 @@ def _sharded_field_pocs_fn(
                 check_every=check_every,
             )
 
-        in_specs = (P(ax), d_spec, P(), P())
+        in_specs = (P(ax), d_spec, e_spec, P())
 
     out_specs = AlternatingProjectionResult(
         eps=P(ax),
@@ -538,6 +559,15 @@ class CorrectionEngine:
                 # float32 ops, so the host staging copy reproduces the
                 # on-device reduction of the unpadded field bitwise.
                 rng32 = np.max(x32) - np.min(x32)
+                if float(rng32) == 0.0:
+                    # mirror resolve_bounds' constant-field diagnosis — the
+                    # sharded branch resolves E before ever reaching it
+                    raise InfeasibleBound(
+                        f"E_rel={float(cfg.E_rel):g} on a constant field: range(x) == 0 "
+                        "resolves the spatial bound to E = 0 (an empty s-cube); pass "
+                        "E_abs for constant fields",
+                        stage="plan",
+                    )
                 E_abs_eff, E_rel_eff = np.float32(cfg.E_rel) * np.float32(rng32), None
         else:
             x32 = np.asarray(x, dtype=np.float32)
@@ -551,7 +581,17 @@ class CorrectionEngine:
             X = rfftn(x_dev)
             grid = power_spectrum_delta_rfft(X, cfg.pspec_rel)
             gmax = float(jnp.max(grid))
-            floor = gmax * cfg.pspec_floor_rel if gmax > 0 else 1.0
+            if gmax <= 0:
+                # grid = t*|X|/sqrt(2) with floor 0, so gmax == 0 iff the
+                # field is all-zero: every Delta_k resolves to 0 and any
+                # published "pspec_rel" guarantee would be meaningless
+                raise InfeasibleBound(
+                    f"pspec_rel={float(cfg.pspec_rel):g} on an all-zero field: every "
+                    "Delta_k resolves to 0 (no spectrum to preserve); use Delta_abs "
+                    "for zero fields",
+                    stage="plan",
+                )
+            floor = gmax * cfg.pspec_floor_rel
             Delta_user = np.asarray(jnp.maximum(grid, floor), dtype=np.float32)
             if sharded:
                 Delta_user = x.unpad_freq(Delta_user)
@@ -573,6 +613,26 @@ class CorrectionEngine:
         E_proj, Delta_proj, Delta, slack_f = float32_bound_discipline(
             E, Delta_user, cfg.quant_bits, l2_norm, abs_max
         )
+        # ROI bounds (ISSUE 9): resolve the user's mask / per-point grid into
+        # the float32 E_n grid the blob stores, then re-run the (elementwise)
+        # discipline on it so every point gets its own shrunk projection
+        # bound — exactly how the pointwise Delta_k grid is treated.
+        E_grid = E_grid_proj = None
+        E_roi = getattr(cfg, "E_roi", None)
+        if E_roi is not None:
+            E_grid = resolve_roi_bound_grid(
+                E_roi, E, tuple(x32.shape), scale=getattr(cfg, "E_roi_scale", 0.1)
+            )
+            E_grid_proj, _, _, _ = float32_bound_discipline(
+                E_grid, Delta_user, cfg.quant_bits, l2_norm, abs_max
+            )
+            E_grid_proj = np.asarray(E_grid_proj, dtype=np.float32)
+            if float(np.min(E_grid_proj)) <= 0:
+                raise InfeasibleBound(
+                    f"tightest ROI bound E_n={float(np.min(E_grid)):g} below float32 "
+                    "representability for this data",
+                    stage="plan",
+                )
         if not pointwise:
             Delta_proj = float(Delta_proj)
             Delta = float(Delta)
@@ -606,6 +666,8 @@ class CorrectionEngine:
             fft_impl=getattr(cfg, "fft_impl", "xla"),
             check_every=getattr(cfg, "check_every", 1),
             warm_start=getattr(cfg, "warm_start", False),
+            E_grid=E_grid,
+            E_grid_proj=E_grid_proj,
         )
 
     def plan_pencils(
@@ -618,6 +680,8 @@ class CorrectionEngine:
         quant_bits: int = DEFAULT_QUANT_BITS,
         E_abs: Optional[float] = None,
         Delta_abs: Optional[float] = None,
+        E_roi=None,
+        E_roi_scale: float = 0.1,
     ) -> Optional[PencilPlan]:
         """Resolve one tensor's pencil-tiled bounds; None if E underflows.
 
@@ -632,6 +696,13 @@ class CorrectionEngine:
         frames carry bounds resolved once on the stream's first frame, so
         re-deriving them from each residual's own range would drift.  An
         absolute Delta needs no forward FFT at all.
+
+        ``E_roi`` (mask or per-point grid, see
+        :func:`repro.core.bounds.resolve_roi_bound_grid`) collapses to the
+        *tightest* resolved bound as the effective uniform ``E``: pencil
+        tiling scrambles spatial adjacency across blocks, so a per-point
+        grid cannot ride the tiled streams — the whole-field path
+        (:meth:`plan_field`) keeps the full grid.
         """
         flat = x32.reshape(-1)
         tiles = np.pad(flat, (0, (-flat.size) % block)).reshape(-1, block)
@@ -641,6 +712,9 @@ class CorrectionEngine:
             if E_rel is None:
                 raise ValueError("plan_pencils needs E_rel or E_abs")
             E = E_rel * float(np.ptp(x32))
+        if E_roi is not None:
+            grid = resolve_roi_bound_grid(E_roi, E, tuple(x32.shape), scale=E_roi_scale)
+            E = float(np.min(grid))
         if Delta_abs is not None:
             Delta = float(Delta_abs)
         else:
@@ -727,9 +801,14 @@ class CorrectionEngine:
             if sharded:
                 res = self._pocs_field_sharded(eps0, plan, warm_freq)
             else:
+                E_op = (
+                    plan.E_proj
+                    if plan.E_grid_proj is None
+                    else jnp.asarray(plan.E_grid_proj)
+                )
                 res = alternating_projection(
                     jnp.asarray(eps0, dtype=jnp.float32),
-                    plan.E_proj,
+                    E_op,
                     jnp.asarray(plan.Delta_proj),
                     max_iters=plan.max_iters,
                     use_kernels=plan.use_kernels,
@@ -769,8 +848,13 @@ class CorrectionEngine:
             spat = eps0.unpad_spatial(spat)
             eps_f = eps0.unpad_spatial(eps_f)
             freq = eps0.unpad_freq(freq)
+        E_pol = (
+            plan.E_proj
+            if plan.E_grid_proj is None
+            else np.asarray(plan.E_grid_proj, dtype=np.float64)
+        )
         eps_f, spat, freq = polish_pocs_float64(
-            eps_f, spat, freq, plan.E_proj, np.asarray(plan.Delta_proj, dtype=np.float64)
+            eps_f, spat, freq, E_pol, np.asarray(plan.Delta_proj, dtype=np.float64)
         )
         converged = bool(res.converged)
         final_violations = 0
@@ -825,6 +909,19 @@ class CorrectionEngine:
             )
         else:
             delta_op = jnp.float32(plan.Delta_proj)
+        if plan.E_grid_proj is not None:
+            # ROI grid enters as a slab-sharded spatial operand; pad rows
+            # carry the (positive) background projection bound so the zero
+            # pad rows of the field stay exactly zero through the clip
+            e_op = jax.device_put(
+                eps0.pad_spatial_np(
+                    np.asarray(plan.E_grid_proj, dtype=np.float32),
+                    fill=np.float32(plan.E_proj),
+                ),
+                NamedSharding(mesh, eps0.spec),
+            )
+        else:
+            e_op = np.float32(plan.E_proj)
         warm_op = None
         if warm_freq is not None:
             # same device layout as a pointwise Delta grid: zero-padded to
@@ -842,11 +939,12 @@ class CorrectionEngine:
             plan.fft_impl,
             plan.check_every,
             warm_op is not None,
+            plan.E_grid_proj is not None,
         )
         # scalar bounds ride as replicated operands (pre-rounded to the f32
         # values the single-device trace uses), so same-shape fields with
         # different bounds share one compiled program
-        args = (eps0.array, delta_op, np.float32(plan.E_proj), np.float32(0.5 * plan.slack_f))
+        args = (eps0.array, delta_op, e_op, np.float32(0.5 * plan.slack_f))
         if warm_op is not None:
             args = args + (warm_op,)
         return fn(*args)
@@ -1028,16 +1126,34 @@ class CorrectionEngine:
         pair_w = np.broadcast_to(np.asarray(rfft_pair_weights(plan.shape)), result.freq.shape)
         delta_b = np.broadcast_to(np.asarray(plan.Delta), result.freq.shape)
         sum_active_delta = float(np.sum((pair_w * delta_b)[result.freq != 0]))
+        n = int(np.prod(plan.shape)) if plan.shape else 1
         m_s, m_f = adaptive_quant_bits(
             plan.quant_bits,
             k_s,
             plan.E,
             float(np.min(plan.Delta)),
             sum_active_delta,
-            int(np.prod(plan.shape)) if plan.shape else 1,
+            n,
         )
+        if plan.roi:
+            # Per-point spatial bounds split the cross-term accounting:
+            # m_s stays from the call above (spatial edits are bounded by
+            # their own per-point bound <= E, so the global-E width covers
+            # the FFT leakage of the quantized stream), while m_f must keep
+            # the IFFT leakage of the frequency stream under the *tightest*
+            # point's reserved margin — rerun with E_min for that side.
+            _, m_f = adaptive_quant_bits(
+                plan.quant_bits,
+                k_s,
+                float(np.min(plan.E_grid)),
+                float(np.min(plan.Delta)),
+                sum_active_delta,
+                n,
+            )
         try:
-            se = encode_edits(result.spat, plan.E, m=m_s, codec=plan.codec)
+            se = encode_edits(
+                result.spat, plan.E_grid if plan.roi else plan.E, m=m_s, codec=plan.codec
+            )
             fe = encode_edits(result.freq, plan.Delta, m=m_f, codec=plan.codec, half_spectrum=True)
         except (RuntimeError, MemoryError, OSError) as e:
             raise classify_exception(e, "encode") from e

@@ -83,6 +83,15 @@ class FFCzConfig:
     Delta_abs: Optional[float] = None
     Delta_rel: Optional[float] = 1e-3
     pspec_rel: Optional[float] = None
+    # ROI bounds (region-aware spatial guarantees): a boolean mask (True =
+    # region of interest, bound tightened to E * E_roi_scale) or a float
+    # grid of per-point absolute bounds (entries <= 0 mean background E),
+    # field-shaped.  See repro.core.bounds.resolve_roi_bound_grid.  The
+    # resolved float32 E_n grid rides the blob in an optional FFCR tail
+    # section; None (default) keeps uniform-E blobs byte-identical to
+    # earlier writers.
+    E_roi: Optional[Any] = None
+    E_roi_scale: float = 0.1
     # Floor for pointwise Delta_k, relative to max_k Delta_k.  Near-dead
     # frequency components contribute nothing to P(k); flooring their bound
     # keeps the f-cube from becoming needle-thin along dead axes, which is
@@ -121,6 +130,12 @@ class FFCzConfig:
     # stays byte-identical to earlier writers.  Decoding verifies the tail
     # whenever one is present, regardless of this flag.
     crc: bool = False
+    # Derived-quantity verify-after-polish (pspec mode only): recheck in
+    # float64 that every live shell's power-spectrum ratio satisfies
+    # |P_hat(k)/P(k) - 1| <= pspec_rel on the decoded field, surfaced as
+    # FFCzStats.pspec_shell_err / pspec_shell_ok.  Opt-in: it costs two
+    # full-field float64 FFTs on the host.
+    verify_pspec: bool = False
 
     def __post_init__(self):
         if (self.E_abs is None) == (self.E_rel is None):
@@ -134,6 +149,8 @@ class FFCzConfig:
             )
         if self.check_every < 1:
             raise ValueError(f"check_every must be >= 1, got {self.check_every}")
+        if not 0.0 < self.E_roi_scale <= 1.0:
+            raise ValueError(f"E_roi_scale must be in (0, 1], got {self.E_roi_scale}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +168,12 @@ class FFCzStats:
     # means the POCS budget ran out: the spatial bound still holds, the
     # frequency bound is violated at exactly this many components.
     final_violations: int = 0
+    # Derived-quantity shell recheck (cfg.verify_pspec, pspec mode only):
+    # max over live shells of |P_hat(k)/P(k) - 1| measured in float64 on the
+    # decoded field, and whether it sits within the claimed pspec_rel.
+    # None when the recheck did not run.
+    pspec_shell_err: Optional[float] = None
+    pspec_shell_ok: Optional[bool] = None
 
     @property
     def total_bytes(self) -> int:
@@ -162,6 +185,9 @@ _WIRE_VERSION = 1
 _V0_HEADER = "<ddBQQQQ"  # E, Delta_scalar, ndim, len(base), len(se), len(fe), len(pw)
 _PAD_MAGIC = b"FFCP"
 _PAD_HEADER = "<IB"  # n_dev (u32), ndim (u8); then ndim * u64 padded shape
+# Optional ROI spatial-bound section (sniffed like FFCP): u64 byte count,
+# then the float32 per-point E_n grid in field shape/order.
+_ROI_MAGIC = b"FFCR"
 # Optional integrity tail (sniffed like FFCP): u8 count, then count * u32
 # CRC32s — whole-blob-so-far, base, spat_edits, freq_edits, pointwise.
 _CRC_MAGIC = b"FFCC"
@@ -223,7 +249,8 @@ class FFCzBlob:
 
         b"FFCZ" | u8 version | <ddBQQQQ> E, Delta, ndim, nb, ns, nf, npw
         | ndim * u64 shape | base | spat_edits | freq_edits | pointwise
-        [| b"FFCP" pad-metadata section]
+        [| b"FFCP" pad-metadata section] [| b"FFCR" ROI bound section]
+        [| b"FFCC" CRC section]
 
     :meth:`from_bytes` length-validates every section against the payload
     and raises ``ValueError`` on truncated or foreign bytes.  Blobs written
@@ -251,6 +278,12 @@ class FFCzBlob:
     # Optional slab-decomposition provenance (uneven sharded writers only);
     # informational — see PadMeta.
     pad_meta: Optional[PadMeta] = None
+    # Optional float32 per-point spatial bound grid (ROI mode, FFCR tail
+    # section; field shape/order).  SEMANTIC — unlike pad_meta/crc it is the
+    # spatial bound the edits were encoded against, so decode must consume
+    # it and payload_bytes() keeps it.  None for uniform-E writers (their
+    # blobs stay byte-identical to pre-ROI writers).
+    roi_bound: Optional[bytes] = None
     # Write (and re-write) the optional FFCC per-section CRC32 tail.  Set by
     # the parser when the section is present, so decode -> re-encode stays
     # byte-stable in both directions; blobs without the tail (every pre-CRC
@@ -274,6 +307,8 @@ class FFCzBlob:
         )
         header += struct.pack(f"<{len(self.shape)}Q", *self.shape)
         tail = self.pad_meta.to_bytes() if self.pad_meta is not None else b""
+        if self.roi_bound is not None:
+            tail += _ROI_MAGIC + struct.pack("<Q", len(self.roi_bound)) + self.roi_bound
         out = header + self.base_blob + se + fe + pw + tail
         if self.crc:
             import zlib
@@ -334,19 +369,35 @@ class FFCzBlob:
         fe_raw = data[off + nb + ns : off + nb + ns + nf]
         pw = data[off + nb + ns + nf : expected] if npw else None
         # optional tail sections, each sniffed by its marker: FFCP pad
-        # metadata, then the FFCC integrity section (always last, since its
-        # leading CRC covers every byte before it); any other tail bytes are
-        # corruption.  v0 and tail-free v1 blobs take none of these branches.
-        pad_meta, has_crc, pos = None, False, expected
+        # metadata, then the FFCR ROI bound grid, then the FFCC integrity
+        # section (always last, since its leading CRC covers every byte
+        # before it); any other tail bytes are corruption.  v0 and tail-free
+        # v1 blobs take none of these branches.
+        pad_meta, roi_bound, has_crc, pos = None, None, False, expected
         if data[pos : pos + 4] == _PAD_MAGIC:
             pad_meta, pos = PadMeta._parse_at(data, pos)
+        if data[pos : pos + 4] == _ROI_MAGIC:
+            if len(data) < pos + 12:
+                raise BlobCorruptError("corrupt FFCz blob: truncated ROI bound section")
+            (n_roi,) = struct.unpack_from("<Q", data, pos + 4)
+            n_expect = 4 * (int(np.prod(shape)) if shape else 1)
+            if n_roi != n_expect:
+                raise BlobCorruptError(
+                    f"corrupt FFCz blob: ROI bound section is {n_roi} bytes, a "
+                    f"float32 grid over shape {tuple(shape)} needs {n_expect}"
+                )
+            if len(data) < pos + 12 + n_roi:
+                raise BlobCorruptError("corrupt FFCz blob: truncated ROI bound section")
+            roi_bound = data[pos + 12 : pos + 12 + n_roi]
+            pos += 12 + n_roi
         if data[pos : pos + 4] == _CRC_MAGIC:
             FFCzBlob._verify_crc(data, pos, (base, se_raw, fe_raw, pw or b""))
             # fixed-size tail: magic + count byte + 5 verified u32 CRCs
             has_crc, pos = True, pos + 4 + 1 + 4 * len(_CRC_SECTIONS)
         if pos != len(data):
             raise BlobCorruptError(
-                "corrupt FFCz blob: trailing bytes are not a pad-metadata or CRC section"
+                "corrupt FFCz blob: trailing bytes are not a pad-metadata, "
+                "ROI-bound, or CRC section"
             )
         se = EncodedEdits.from_bytes(se_raw)
         fe = EncodedEdits.from_bytes(fe_raw)
@@ -359,6 +410,7 @@ class FFCzBlob:
             pointwise_delta=pw,
             shape=tuple(shape),
             pad_meta=pad_meta,
+            roi_bound=roi_bound,
             crc=has_crc,
         )
 
@@ -458,6 +510,7 @@ class FFCz:
             pointwise_delta=plan.pointwise_bytes(),
             shape=plan.shape,
             pad_meta=pad_meta,
+            roi_bound=plan.roi_bytes(),
             crc=cfg.crc,
         )
 
@@ -481,9 +534,25 @@ class FFCz:
         # half-spectrum check is exhaustive: every full-spectrum component
         # shares |Re|/|Im| (and its Delta_k) with its conjugate image here
         d = np.fft.rfftn(eps)
-        spatial_margin = float(plan.E - np.max(np.abs(eps)))
+        if blob.roi_bound is not None:
+            # ROI mode: the margin is against the STORED per-point grid, so
+            # a held bound means every region's own E_n held, not just the
+            # global envelope
+            grid64 = np.frombuffer(blob.roi_bound, dtype=np.float32).reshape(
+                blob.shape
+            ).astype(np.float64)
+            spatial_margin = float(np.min(grid64 - np.abs(eps)))
+        else:
+            spatial_margin = float(plan.E - np.max(np.abs(eps)))
         freq_excess = np.maximum(np.abs(d.real), np.abs(d.imag)) - np.asarray(plan.Delta)
         frequency_margin = float(-np.max(freq_excess))
+        pspec_shell_err = pspec_shell_ok = None
+        cfg = self.config
+        if cfg.verify_pspec and cfg.pspec_rel is not None:
+            from repro.core.spectrum import shell_ratio_error
+
+            pspec_shell_err = float(shell_ratio_error(x_final, x32))
+            pspec_shell_ok = bool(pspec_shell_err <= cfg.pspec_rel)
         return FFCzStats(
             iterations=result.iterations,
             converged=result.converged,
@@ -494,6 +563,8 @@ class FFCz:
             spatial_margin=spatial_margin,
             frequency_margin=frequency_margin,
             final_violations=result.final_violations,
+            pspec_shell_err=pspec_shell_err,
+            pspec_shell_ok=pspec_shell_ok,
         )
 
     # -- decompression ----------------------------------------------------
@@ -524,7 +595,13 @@ class FFCz:
             Delta = np.frombuffer(blob.pointwise_delta, dtype=np.float32).reshape(dshape)
         else:
             Delta = blob.Delta_scalar
-        spat = decode_edits(blob.spat_edits, blob.E)
+        if blob.roi_bound is not None:
+            # per-point E_n grid (ROI mode): the spatial stream was quantized
+            # against the stored grid, so decode must use the same values
+            E_dec = np.frombuffer(blob.roi_bound, dtype=np.float32).reshape(blob.shape)
+        else:
+            E_dec = blob.E
+        spat = decode_edits(blob.spat_edits, E_dec)
         freq = decode_edits(blob.freq_edits, Delta)
         if half:
             freq_spatial = _irfftn(freq, blob.shape)

@@ -246,6 +246,13 @@ def _alternating_projection(
                 f"dist mode needs a scalar Delta or the local half-spectrum block "
                 f"{freq_shape}, got {Delta_r.shape}"
             )
+        if E.ndim and E.shape != eps0.shape:
+            # pointwise spatial bounds (ROI grids) must arrive pre-sharded in
+            # the padded local layout, exactly like a pointwise Delta grid
+            raise ValueError(
+                f"dist mode needs a scalar E or the local spatial block "
+                f"{eps0.shape}, got {E.shape}"
+            )
         inv_impl = "packed" if _packed_ok else "xla"
         fwd = lambda e: _dfft.rfftn_local(e, dist).astype(cdtype)  # noqa: E731
         inv = lambda d: _dfft.irfftn_local(d, dist, fft_impl=inv_impl).astype(eps0.dtype)  # noqa: E731
@@ -398,9 +405,21 @@ def _alternating_projection(
         return (eps_next, spat_edits, freq_edits, it + 1, done, viol)
 
     if warm_freq is None:
+        eps_init, spat0 = eps0, jnp.zeros_like(eps0)
+        if jnp.ndim(E) > 0:
+            # Pointwise spatial bounds (ROI grids): the base compressor only
+            # guarantees the *global* bound, so eps0 may already violate the
+            # tighter per-point cube — and a trivially-converged loop (f-cube
+            # satisfied at iteration 0) would return it unclipped.  Restore
+            # the "state inside the s-cube" invariant before iteration 0,
+            # same construction as the warm seed below.  Scalar E keeps the
+            # exact legacy state (eps0 is inside the global cube by contract).
+            eps_init, spat0 = project_scube(eps0, E)
+            eps_init = eps_init.astype(eps0.dtype)
+            spat0 = spat0.astype(eps0.dtype)
         state0 = (
-            eps0,
-            jnp.zeros_like(eps0),
+            eps_init,
+            spat0,
             jnp.zeros(freq_shape, dtype=cdtype),
             jnp.int32(0),
             jnp.bool_(False),

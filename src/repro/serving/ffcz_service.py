@@ -154,6 +154,9 @@ class RequestStats:
     fft_impl: Optional[str] = None  # transform the final attempt ran with
     converged: Optional[bool] = None
     final_violations: int = 0
+    # Derived-quantity shell recheck (cfg.verify_pspec, field requests in
+    # pspec mode): max live-shell |P_hat(k)/P(k) - 1| of the decoded blob.
+    pspec_shell_err: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,6 +185,7 @@ class _Request:
     fft_impl: Optional[str] = None
     converged: Optional[bool] = None
     final_violations: int = 0
+    pspec_shell_err: Optional[float] = None
 
     def elapsed(self, now: float) -> float:
         return (now - self.t0) + self.penalty_s
@@ -556,6 +560,7 @@ class FFCzService:
             fft_impl=req.fft_impl,
             converged=req.converged,
             final_violations=req.final_violations,
+            pspec_shell_err=req.pspec_shell_err,
         )
 
     # -- staging-buffer cache ----------------------------------------------
@@ -698,9 +703,20 @@ class FFCzService:
                     Delta_scalar=run_plan.delta_scalar,
                     pointwise_delta=run_plan.pointwise_bytes(),
                     shape=run_plan.shape,
+                    roi_bound=run_plan.roi_bytes(),
                     crc=cfg.crc,
                 )
                 payload = blob.to_bytes()
+                if getattr(cfg, "verify_pspec", False) and cfg.pspec_rel is not None:
+                    # derived-quantity recheck rides the encode stage: decode
+                    # the assembled blob and measure the live-shell power-
+                    # spectrum ratio in float64 (opt-in; two host FFTs)
+                    from repro.core.spectrum import shell_ratio_error
+
+                    x_final = FFCz(self.base, cfg, engine=self.engine).decompress(blob)
+                    req.pspec_shell_err = float(
+                        shell_ratio_error(x_final, np.asarray(req.payload, dtype=np.float32))
+                    )
             finally:
                 self._tick("encode_s", t0)
             return self._complete(req, payload)

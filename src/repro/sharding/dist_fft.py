@@ -515,6 +515,19 @@ class ShardedField:
             return a[: self.gshape[0]]
         return a[:, : self.freq_shape[-1]]
 
+    def pad_spatial_np(self, grid: np.ndarray, fill: float = 0.0) -> np.ndarray:
+        """Pad a true-extent spatial grid to the device layout.
+
+        ``fill`` sets the pad-row value — bound grids (ROI ``E_n``) pad with
+        the background bound so the zero pad rows of the sharded field stay
+        inside their cube (``clip(0, ±fill) == 0`` needs ``fill > 0``).
+        """
+        pad0 = self.padded_shape[0] - self.gshape[0]
+        if pad0:
+            widths = [(0, pad0)] + [(0, 0)] * (self.ndim - 1)
+            return np.pad(grid, widths, constant_values=fill)
+        return grid
+
     def pad_freq_np(self, grid: np.ndarray) -> np.ndarray:
         """Zero-pad a true-extent half-spectrum grid to the device layout."""
         pfs = self.padded_freq_shape

@@ -45,7 +45,7 @@ from _hyp import given, settings, st  # hypothesis or skip-stubs (requirements-d
 from repro.compressors import get_compressor
 from repro.core.cubes import rfft_shape
 from repro.core.engine import CorrectionEngine
-from repro.core.ffcz import FFCz, FFCzConfig, ShardedField
+from repro.core.ffcz import FFCz, FFCzBlob, FFCzConfig, ShardedField
 from repro.sharding.dist_fft import classify_parity
 
 _N_DEV = len(jax.devices())
@@ -84,10 +84,16 @@ def _cfg(kind, x, **kw) -> FFCzConfig:
 
 def _assert_round_trip_conforms(x, blob, dec):
     """The paper contract, checked in float64 against the STORED bounds:
-    spatial bound unconditional; frequency bound whenever converged."""
+    spatial bound unconditional; frequency bound whenever converged.  ROI
+    blobs are checked against their stored per-point grid — every region's
+    own E_n, not just the global envelope."""
     x32 = np.asarray(x, np.float32)
     assert dec.shape == x32.shape and dec.dtype == np.float32
     eps = dec.astype(np.float64) - x32.astype(np.float64)
+    if blob.roi_bound is not None:
+        grid = np.frombuffer(blob.roi_bound, np.float32).reshape(blob.shape)
+        assert (np.abs(eps) <= grid.astype(np.float64)).all(), "ROI spatial bound violated"
+        assert float(grid.max()) <= blob.E + 1e-12  # header E stays a global envelope
     assert np.abs(eps).max() <= blob.E, "spatial bound violated"
     assert blob.stats is None or blob.stats.converged, "POCS did not converge"
     d = np.fft.rfftn(eps)
@@ -268,6 +274,230 @@ class TestFftImplConformance:
         c = FFCz(get_compressor("szlike"), _cfg("pspec", x, check_every=4))
         blob = c.compress(x)
         _assert_round_trip_conforms(x, blob, c.decompress(blob))
+
+
+# ---------------------------------------------------------------------------
+# region-aware ROI bounds (ISSUE 9)
+
+
+def _roi_mask(shape, seed=0):
+    """A deterministic box ROI covering roughly the central eighth."""
+    mask = np.zeros(shape, dtype=bool)
+    sl = tuple(slice(n // 4, max(n // 4 + 1, n // 2)) for n in shape)
+    mask[sl] = True
+    return mask
+
+
+class TestRoiConformance:
+    """The tentpole claim: a per-point E_n grid rides PLAN -> POCS -> blob,
+    and the decoded field satisfies the STORED grid (float64 recheck) AND
+    the frequency bound simultaneously, on every backend."""
+
+    @pytest.mark.parametrize("kind", BOUND_KINDS)
+    @pytest.mark.parametrize("shape", [(30, 14, 10), (13, 11, 7), (9, 11)], ids=str)
+    def test_single_device_round_trip(self, shape, kind):
+        x = _field(shape, seed=sum(shape))
+        mask = _roi_mask(shape)
+        c = FFCz(get_compressor("szlike"), _cfg(kind, x, E_roi=mask, E_roi_scale=0.25))
+        blob = c.compress(x)
+        assert blob.roi_bound is not None
+        _assert_round_trip_conforms(x, blob, c.decompress(blob))
+        # the stored grid is exactly the resolved mask values
+        grid = np.frombuffer(blob.roi_bound, np.float32).reshape(shape)
+        assert set(np.unique(grid)) == {np.float32(blob.E), np.float32(blob.E * 0.25)}
+
+    @pytest.mark.parametrize("kind", ["Delta_rel", "pspec"])
+    @pytest.mark.parametrize("shape", [(32, 16, 12), (30, 14, 10), (13, 11, 7)], ids=str)
+    def test_sharded_round_trip_and_parity_class(self, shape, kind):
+        """The ROI grid enters shard_map as a slab-sharded operand (pad rows
+        carry the background bound); blobs keep the parity-class contract."""
+        x = _field(shape, seed=sum(shape))
+        mask = _roi_mask(shape)
+        c = FFCz(get_compressor("szlike"), _cfg(kind, x, E_roi=mask, E_roi_scale=0.25))
+        field = ShardedField.shard(x)
+        blob = c.compress(field)
+        _assert_round_trip_conforms(x, blob, c.decompress(blob))
+        blob_single = c.compress(x)
+        if field.parity == "bitwise":
+            assert blob.payload_bytes() == blob_single.to_bytes()
+
+    @pytest.mark.parametrize("impl", FFT_IMPLS)
+    def test_fft_impls_round_trip(self, impl):
+        """The kernel epilogues consume the pointwise E grid (packed's fused
+        unpack s-clip, pallas' tiled bound) like the f-cube's Delta_k."""
+        shape = (30, 14, 10)
+        x = _field(shape, seed=3)
+        mask = _roi_mask(shape)
+        c = FFCz(
+            get_compressor("szlike"),
+            _cfg("Delta_rel", x, E_roi=mask, E_roi_scale=0.25, fft_impl=impl),
+        )
+        blob = c.compress(x)
+        _assert_round_trip_conforms(x, blob, c.decompress(blob))
+
+    def test_float_grid_roi(self):
+        """Float per-point grids: positive entries used (clamped to E),
+        non-positive entries mean background."""
+        shape = (15, 14, 10)
+        x = _field(shape, seed=9)
+        g = np.zeros(shape, np.float32)
+        g[2:8, 3:9, 1:6] = 1e-4
+        c = FFCz(
+            get_compressor("szlike"),
+            FFCzConfig(E_abs=5e-3, E_rel=None, Delta_rel=1e-3, max_iters=800, E_roi=g),
+        )
+        blob = c.compress(x)
+        _assert_round_trip_conforms(x, blob, c.decompress(blob))
+        grid = np.frombuffer(blob.roi_bound, np.float32).reshape(shape)
+        assert grid[3, 4, 2] == np.float32(1e-4)
+        assert grid[0, 0, 0] == np.float32(5e-3)
+
+    def test_uniform_blob_byte_identical_without_roi(self):
+        """The FFCR section is strictly additive: a config without E_roi
+        writes bytes identical to a pre-ROI writer (golden-fixture class)."""
+        x = _field((15, 14, 10), seed=11)
+        c = FFCz(get_compressor("szlike"), _cfg("Delta_rel", x))
+        blob = c.compress(x)
+        assert blob.roi_bound is None
+        raw = blob.to_bytes()
+        reparsed = FFCzBlob.from_bytes(raw)
+        assert reparsed.roi_bound is None and reparsed.to_bytes() == raw
+
+    def test_trivially_converged_base_still_clipped_to_roi(self):
+        """A base error already inside the f-cube (trivial convergence) must
+        STILL be projected onto the tighter ROI s-cube — the cold start
+        pre-projects pointwise grids (repro.core.pocs)."""
+        from repro.core.pocs import alternating_projection
+
+        eps0 = np.zeros((8, 8), np.float32)
+        eps0[2, 2] = 0.05  # inside a loose f-cube, outside the tight ROI cell
+        E_grid = np.full((8, 8), 0.1, np.float32)
+        E_grid[2, 2] = 0.01
+        res = alternating_projection(eps0, E_grid, np.float32(1e3), max_iters=50)
+        assert bool(res.converged)
+        assert (np.abs(np.asarray(res.eps)) <= E_grid).all()
+
+    def test_verify_pspec_shell_recheck(self):
+        """Opt-in derived-quantity verify: float64 per-shell power ratios of
+        the decoded field stay inside the claimed pspec_rel ribbon on a
+        live-shell (white-ish) field, surfaced through FFCzStats."""
+        rng = np.random.default_rng(17)
+        x = (rng.standard_normal((24, 18)) * 0.5 + 4.0).astype(np.float32)
+        cfg = FFCzConfig(
+            E_rel=1e-3, Delta_rel=None, pspec_rel=1e-3, max_iters=1500, verify_pspec=True
+        )
+        blob = FFCz(get_compressor("szlike"), cfg).compress(x)
+        assert blob.stats.pspec_shell_err is not None
+        assert blob.stats.pspec_shell_err <= 1e-3
+        assert blob.stats.pspec_shell_ok is True
+        # non-pspec configs never run the recheck
+        blob2 = FFCz(get_compressor("szlike"), _cfg("Delta_rel", x)).compress(x)
+        assert blob2.stats.pspec_shell_err is None and blob2.stats.pspec_shell_ok is None
+
+    @given(st.data())
+    @settings(max_examples=8, deadline=None)
+    def test_random_mask_shapes_round_trip(self, data):
+        """Hypothesis sweep over mask shapes (odd/prime extents included) and
+        scales: the stored-grid contract holds for every draw."""
+        shape = _draw_shape(data)
+        seed = data.draw(st.integers(0, 2**16))
+        scale = data.draw(st.sampled_from([0.1, 0.25, 0.5, 1.0]))
+        x = _field(shape, seed=seed)
+        rng = np.random.default_rng(seed)
+        mask = rng.random(shape) < 0.2
+        c = FFCz(
+            get_compressor("szlike"),
+            _cfg("Delta_rel", x, E_roi=mask, E_roi_scale=scale, max_iters=1500),
+        )
+        blob = c.compress(x)
+        _assert_round_trip_conforms(x, blob, c.decompress(blob))
+
+
+class TestDegenerateFieldConformance:
+    """ISSUE 9 satellite: constant and all-zero fields either round-trip
+    cleanly or reject with a structured InfeasibleBound naming the cause —
+    never a cryptic downstream failure."""
+
+    @pytest.mark.parametrize("kind", BOUND_KINDS)
+    def test_constant_field_e_rel_rejects_structured(self, kind):
+        from repro.core.errors import InfeasibleBound
+
+        x = np.full((8, 8), 3.0, np.float32)
+        c = FFCz(get_compressor("szlike"), _cfg(kind, x))
+        with pytest.raises(InfeasibleBound, match="constant field"):
+            c.compress(x)
+
+    @pytest.mark.parametrize("kind", BOUND_KINDS)
+    def test_constant_field_e_abs_round_trips(self, kind):
+        """With an absolute spatial bound, constant fields are legitimate
+        inputs for the Delta kinds; pspec still rejects (no spectrum)."""
+        from repro.core.errors import InfeasibleBound
+
+        x = np.full((8, 8), 3.0, np.float32)
+        if kind == "Delta_abs":
+            cfg = FFCzConfig(E_abs=1e-3, E_rel=None, Delta_rel=None, Delta_abs=1.0)
+        elif kind == "Delta_rel":
+            cfg = FFCzConfig(E_abs=1e-3, E_rel=None, Delta_rel=1e-3)
+        else:
+            cfg = FFCzConfig(E_abs=1e-3, E_rel=None, Delta_rel=None, pspec_rel=1e-3)
+        c = FFCz(get_compressor("szlike"), cfg)
+        if kind == "Delta_rel":
+            # Delta_rel on a constant field: max|X| = |DC| > 0, resolvable
+            blob = c.compress(x)
+            _assert_round_trip_conforms(x, blob, c.decompress(blob))
+        elif kind == "Delta_abs":
+            blob = c.compress(x)
+            _assert_round_trip_conforms(x, blob, c.decompress(blob))
+        else:
+            # constant field pspec: grid = t|X|/sqrt2 is nonzero only at DC —
+            # resolvable in principle; accept either a clean round trip or a
+            # structured rejection, never an unstructured crash
+            try:
+                blob = c.compress(x)
+                _assert_round_trip_conforms(x, blob, c.decompress(blob))
+            except InfeasibleBound:
+                pass
+
+    def test_all_zero_field_pspec_rejects_structured(self):
+        from repro.core.errors import InfeasibleBound
+
+        x = np.zeros((8, 8), np.float32)
+        c = FFCz(
+            get_compressor("szlike"),
+            FFCzConfig(E_abs=1e-3, E_rel=None, Delta_rel=None, pspec_rel=1e-3),
+        )
+        with pytest.raises(InfeasibleBound, match="all-zero"):
+            c.compress(x)
+
+    @pytest.mark.parametrize("kind", ["Delta_abs", "Delta_rel"])
+    def test_all_zero_field_delta_kinds(self, kind):
+        """All-zero fields with absolute E: Delta_abs round-trips exactly;
+        Delta_rel resolves Delta = 0 and rejects structurally."""
+        from repro.core.errors import InfeasibleBound
+
+        x = np.zeros((8, 8), np.float32)
+        if kind == "Delta_abs":
+            cfg = FFCzConfig(E_abs=1e-3, E_rel=None, Delta_rel=None, Delta_abs=1.0)
+            c = FFCz(get_compressor("szlike"), cfg)
+            blob = c.compress(x)
+            dec = c.decompress(blob)
+            _assert_round_trip_conforms(x, blob, dec)
+        else:
+            cfg = FFCzConfig(E_abs=1e-3, E_rel=None, Delta_rel=1e-3)
+            c = FFCz(get_compressor("szlike"), cfg)
+            try:
+                blob = c.compress(x)
+                _assert_round_trip_conforms(x, blob, c.decompress(blob))
+            except InfeasibleBound:
+                pass
+
+    def test_sharded_constant_field_rejects_structured(self):
+        from repro.core.errors import InfeasibleBound
+
+        x = np.full((16, 8), 2.0, np.float32)
+        c = FFCz(get_compressor("szlike"), _cfg("Delta_rel", x))
+        with pytest.raises(InfeasibleBound, match="constant field"):
+            c.compress(ShardedField.shard(x))
 
 
 # ---------------------------------------------------------------------------

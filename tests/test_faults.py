@@ -246,8 +246,9 @@ class TestDegradationLadder:
 
 class TestRejections:
     def test_infeasible_bound_rejects_structured(self):
-        """A constant field has zero range: E_rel resolves to an E below
-        float32 representability — a request property, rejected not crashed."""
+        """A constant field has zero range: E_rel resolves an empty s-cube,
+        diagnosed at bound-resolution time (ISSUE 9) — a request property,
+        rejected not crashed."""
         svc = _service()
         u = svc.submit_compress(np.zeros((8, 8), np.float32), _field_cfg())
         r = svc.drain()[u]
@@ -318,6 +319,31 @@ class TestBlobDecodeHardening:
         for junk in [b"", b"\x00", b"FFCZ", os.urandom(64), b"A" * 1000]:
             with pytest.raises((BlobCorruptError, ValueError)):
                 FFCzBlob.from_bytes(junk)
+
+    @pytest.mark.parametrize("name", FIXTURES)
+    def test_appended_trailing_bytes_rejected(self, name):
+        """Regression (ISSUE 9): bytes past the declared sections used to be
+        silently ignored; they must reject as corruption while the FFCP/FFCR/
+        FFCC tail sniff keeps working on unmodified blobs."""
+        raw = self._load(name)
+        FFCzBlob.from_bytes(raw)  # the pristine fixture still parses
+        for tail in [b"\x00", b"garbage", os.urandom(17), b"FFCQ" + b"\x00" * 8]:
+            with pytest.raises(BlobCorruptError):
+                FFCzBlob.from_bytes(raw + tail)
+
+    def test_edit_stream_trailing_bytes_rejected(self):
+        """EncodedEdits.from_bytes rejects surplus bytes past its declared
+        flag/payload sections (the container slices exactly)."""
+        from repro.core.edits import EncodedEdits, encode_edits
+
+        edits = np.zeros(64)
+        edits[3] = 0.25
+        raw = encode_edits(edits, 0.5).to_bytes()
+        assert EncodedEdits.from_bytes(raw).n_active == 1
+        with pytest.raises(BlobCorruptError, match="trailing"):
+            EncodedEdits.from_bytes(raw + b"\x00")
+        with pytest.raises(BlobCorruptError):
+            EncodedEdits.from_bytes(raw + os.urandom(9))
 
     def test_legacy_fixtures_still_decode(self):
         """Hardening must not reject a single valid legacy byte stream, and

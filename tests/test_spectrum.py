@@ -5,13 +5,15 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st  # hypothesis or skip-stubs (requirements-dev.txt)
 
-from repro.core.bounds import power_spectrum_delta, resolve_bounds
+from repro.core.bounds import power_spectrum_delta, resolve_bounds, resolve_roi_bound_grid
+from repro.core.errors import InfeasibleBound
 from repro.core.spectrum import (
     bitrate,
     power_spectrum,
     power_spectrum_relative_error,
     psnr,
     relative_frequency_error,
+    shell_ratio_error,
     ssnr,
     ssnr_spatial,
 )
@@ -68,6 +70,42 @@ class TestMetrics:
     def test_bitrate(self):
         assert bitrate(100, 100) == 8.0
 
+    def test_psnr_constant_field_finite(self):
+        """Regression (ISSUE 9): constant reference => range 0 used to make
+        log10 return -inf/NaN; the clamp degrades to a finite value."""
+        x = np.full((8, 8), 3.0, np.float32)
+        exact = float(psnr(jnp.asarray(x), jnp.asarray(x)))
+        noisy = float(psnr(jnp.asarray(x + 0.1), jnp.asarray(x)))
+        assert np.isfinite(exact) and np.isfinite(noisy)
+        assert noisy < exact  # still ordered: noise must not raise the metric
+
+    def test_rfe_zero_field_finite(self):
+        """Regression (ISSUE 9): all-zero reference spectrum divided by
+        max|X| == 0; the clamp yields zeros for exact reconstruction and
+        finite values otherwise."""
+        Z = jnp.zeros((5, 5), dtype=jnp.complex64)
+        assert np.abs(np.asarray(relative_frequency_error(Z, Z))).max() == 0
+        off = np.asarray(relative_frequency_error(Z + (0.5 + 0j), Z))
+        assert np.all(np.isfinite(off))
+
+
+class TestShellRatioError:
+    def test_identity_is_zero(self, rng):
+        x = rng.standard_normal((12, 10)).astype(np.float32) + 4.0
+        assert shell_ratio_error(x, x) == 0.0
+
+    def test_detects_scaled_spectrum(self, rng):
+        """Scaling the fluctuations by (1 + a) scales every shell's power by
+        (1 + a)^2, so the max ratio error must be ~(1+a)^2 - 1."""
+        x = rng.standard_normal((16, 16)) + 10.0
+        a = 0.01
+        x_hat = x.mean() + (x - x.mean()) * (1.0 + a)
+        err = shell_ratio_error(x_hat, x)
+        np.testing.assert_allclose(err, (1 + a) ** 2 - 1, rtol=1e-6)
+
+    def test_all_zero_fields(self):
+        assert shell_ratio_error(np.zeros((6, 6)), np.zeros((6, 6))) == 0.0
+
 
 class TestBounds:
     def test_resolve_relative(self, rng):
@@ -81,6 +119,16 @@ class TestBounds:
         with pytest.raises(ValueError):
             resolve_bounds(x, E_abs=1.0, E_rel=1.0, Delta_rel=0.1)
 
+    def test_resolve_constant_field_e_rel_raises(self):
+        """Regression (ISSUE 9): E_rel on a constant field used to resolve
+        E = 0 and fail much later with a cryptic representability error."""
+        x = jnp.full((6, 6), 2.5)
+        with pytest.raises(InfeasibleBound, match="constant field"):
+            resolve_bounds(x, E_rel=1e-3, Delta_rel=1e-3)
+        # E_abs on the same field stays fine
+        b = resolve_bounds(x, E_abs=1e-3, Delta_abs=1.0)
+        assert float(b.E) == 1e-3
+
     @given(st.floats(1e-4, 0.5))
     @settings(max_examples=30, deadline=None)
     def test_pspec_delta_guarantee(self, rel):
@@ -92,3 +140,32 @@ class TestBounds:
         worst_lo = abs(X - t * X) ** 2  # (1-t)^2
         assert worst_hi <= (1 + rel) * (1 + 1e-12)
         assert worst_lo >= (1 - rel) * (1 - 1e-12)
+
+
+class TestRoiBoundGrid:
+    def test_boolean_mask(self):
+        mask = np.zeros((4, 6), dtype=bool)
+        mask[1:3, 2:5] = True
+        grid = resolve_roi_bound_grid(mask, 0.8, (4, 6), scale=0.25)
+        assert grid.dtype == np.float32
+        np.testing.assert_allclose(grid[mask], np.float32(0.8 * 0.25))
+        np.testing.assert_allclose(grid[~mask], np.float32(0.8))
+
+    def test_float_grid_clamps_to_global(self):
+        g = np.zeros((3, 3), np.float32)
+        g[0, 0] = 0.01  # used directly
+        g[1, 1] = 5.0  # clamped: ROI bounds only tighten
+        grid = resolve_roi_bound_grid(g, 0.5, (3, 3))
+        assert grid[0, 0] == np.float32(0.01)
+        assert grid[1, 1] == np.float32(0.5)
+        assert grid[2, 2] == np.float32(0.5)  # <= 0 means background
+
+    def test_shape_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="must match the field shape"):
+            resolve_roi_bound_grid(np.zeros((2, 2), dtype=bool), 1.0, (4, 4))
+
+    def test_bad_scale_rejected(self):
+        m = np.zeros((2, 2), dtype=bool)
+        for s in (0.0, -0.5, 1.5):
+            with pytest.raises(ValueError, match="E_roi_scale"):
+                resolve_roi_bound_grid(m, 1.0, (2, 2), scale=s)
