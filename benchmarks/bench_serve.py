@@ -13,6 +13,12 @@ same seeded workload, two ways:
                  steps the service between arrivals, measuring achieved
                  throughput and p50/p99 latency under that offered load
                  (``serve/load-sweep`` rows).
+  session-append per-frame incremental arrival through the durable session
+                 path (open / append / finalize, one drain per frame — the
+                 live-arrival model) vs one ``submit_stream`` over the same
+                 frames, recorded as ``serve/session-append`` with the
+                 wall-ratio ``speedup_session_vs_stream``; the finalize
+                 container is asserted byte-identical to the stream path.
 
 Workload mix, bounds, and fault probabilities reuse the
 ``launch/serve_ffcz.py`` flag groups, so any chaos configuration the service
@@ -40,6 +46,7 @@ import time
 
 import numpy as np
 
+from repro.core.temporal import TemporalConfig
 from repro.launch.serve_ffcz import (
     add_fault_args,
     add_service_args,
@@ -135,6 +142,73 @@ def run_open_loop(args, depth, n_requests, rate_rps):
     return wall, lats
 
 
+def _session_workload(args, n_frames, seed):
+    """A coherent drifting field sequence, same shape discipline as the
+    request mix: one fixed ``--field-size`` edge so jit stays warm."""
+    rng = np.random.default_rng(seed)
+    edge = args.field_size
+    x = rng.standard_normal((edge, edge)).astype(np.float32)
+    frames = [x]
+    for _ in range(n_frames - 1):
+        x = x + 0.05 * rng.standard_normal((edge, edge)).astype(np.float32)
+        frames.append(x)
+    return frames
+
+
+def run_session_bench(args, n_frames):
+    """serve/session-append: incremental per-frame arrival through the
+    durable session path (open / append+drain per frame / finalize) vs one
+    ``submit_stream`` over the same frames.  The session path prices
+    admission, per-append journaling, and receipt bookkeeping on top of the
+    same encode work, so the ratio sits near (below) 1.0 — the recorded
+    ``speedup_session_vs_stream`` guards that overhead against collapse,
+    it is not a speedup claim.  Appends drain one at a time because that is
+    the live-arrival model the session exists for: the next frame does not
+    exist until the previous ack."""
+    svc = build_service(args, pipeline_depth=2)
+    cfg = field_config(args)
+    stream = TemporalConfig(mode="field", predictor="linear", keyframe_interval=4)
+    frames = _session_workload(args, n_frames, args.seed + 3)
+
+    def one_session():
+        sid = svc.open_session(cfg, stream)
+        lats = []
+        for t, frame in enumerate(frames):
+            t0 = time.perf_counter()
+            uid = svc.submit_append(sid, t, frame)
+            res = svc.drain()
+            lats.append(time.perf_counter() - t0)
+            assert res[uid].ok, f"bench append failed: {res[uid].error}"
+        fin = svc.submit_finalize(sid)
+        res = svc.drain()
+        assert res[fin].ok
+        return lats, res[fin].payload
+
+    def one_stream():
+        uid = svc.submit_stream(frames, cfg, stream)
+        res = svc.drain()
+        assert res[uid].ok
+        return res[uid].payload
+
+    one_session()  # warmup: first session compiles every bucket shape
+    one_stream()
+    for k in svc.timers:
+        svc.timers[k] = 0.0
+
+    t0 = time.perf_counter()
+    lats, session_container = one_session()
+    session_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    stream_container = one_stream()
+    stream_wall = time.perf_counter() - t0
+    svc.close()
+    assert session_container == stream_container, (
+        "session finalize must be byte-identical to submit_stream over the "
+        "same frames (warm_start=False); the paths diverged"
+    )
+    return session_wall, stream_wall, lats
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -195,6 +269,26 @@ def main():
         })
         print(f"open loop @ {rate:6.1f} req/s offered: {achieved:7.2f} achieved  "
               f"p50={pct['p50_ms']:.1f}ms p99={pct['p99_ms']:.1f}ms")
+
+    n_frames = 4 if args.quick else 16
+    session_wall, stream_wall, append_lats = run_session_bench(args, n_frames)
+    # throughput ratio == wall ratio (same frame count both ways); near 1.0
+    # means the session machinery (journal, receipts, admission) is cheap
+    # next to the encode work, well below means it collapsed
+    session_speedup = stream_wall / session_wall
+    pct = _percentiles(append_lats)
+    rows.append({
+        "bench": "serve", "path": "session-append",
+        "shape": [n_frames, args.field_size],
+        "wall_session_s": round(session_wall, 4),
+        "wall_stream_s": round(stream_wall, 4),
+        "appends_per_s": round(n_frames / session_wall, 2),
+        "speedup_session_vs_stream": round(session_speedup, 4),
+        **pct, **common,
+    })
+    print(f"session append ({n_frames} frames): "
+          f"{n_frames / session_wall:7.2f} appends/s  "
+          f"vs stream {session_speedup:.2f}x  p99={pct['p99_ms']:.1f}ms")
 
     record = {"meta": {}, "rows": []}
     if os.path.exists(args.out):

@@ -62,6 +62,17 @@ RECORDED = os.path.join(ROOT, "BENCH_pocs.json")
 #                          sequence (recorded ~10x; the ratio is an
 #                          iteration count, so it is noise-free — the bar
 #                          guards the warm path going dead, not jitter)
+#   serve/session-append   per-frame session arrival vs one submit_stream
+#                          over the same frames (ISSUE 10).  The session
+#                          path adds WAL journaling, receipt bookkeeping,
+#                          and one drain per frame on top of the same encode
+#                          work, so the ratio sits near (below) 1.0; bar 0.4
+#                          is a no-collapse floor (e.g. the journal path
+#                          re-encoding frames, or appends losing bucket
+#                          reuse), not a speedup claim.  Like every entry it
+#                          scales with FFCZ_BENCH_MIN_SCALE on refresh, but
+#                          a refresh needing < 0.4 here means the session
+#                          path itself regressed — fix it, don't scale it.
 # Interpret-mode pallas rows and fake-device sharded rows carry no bar:
 # their CPU numbers price emulation/core-sharing, not the claim.
 THRESHOLDS = {
@@ -74,6 +85,7 @@ THRESHOLDS = {
     ("engine_field", "engine-device"): [("speedup_engine_vs_host", 1.05, None)],
     ("batched", "correct_batch"): [("speedup_batched_vs_loop", 0.85, None)],
     ("stream", "warm-vs-cold"): [("iter_reduction_warm_vs_cold", 1.2, None)],
+    ("serve", "session-append"): [("speedup_session_vs_stream", 0.4, None)],
 }
 
 # serve/pipelined-vs-serial (benchmarks/bench_serve.py): the ISSUE 7

@@ -17,7 +17,8 @@ the same one:
   ``"timeout"``  the request's deadline passed; terminal by definition.
 
 Errors carry the pipeline ``stage`` they surfaced in (``plan`` / ``base`` /
-``execute`` / ``encode`` / ``decode`` / ``admit`` / ``service``) and the
+``execute`` / ``encode`` / ``decode`` / ``admit`` / ``session`` /
+``service``) and the
 original ``cause`` exception when they wrap one.  The decode-side
 :class:`BlobCorruptError` and the plan-side :class:`InfeasibleBound` also
 subclass ``ValueError`` so pre-taxonomy callers (and tests) that catch
@@ -104,6 +105,56 @@ class BlobCorruptError(PermanentError, ValueError):
 
     def __init__(self, message: str, *, stage: str = "decode", cause: Optional[BaseException] = None):
         super().__init__(message, stage=stage, cause=cause)
+
+
+class StreamStateError(PermanentError):
+    """A stream encoder was driven through an illegal lifecycle transition
+    (``add_frame`` after ``finish()``, double-``finish()``).  A caller bug,
+    not a data fault: the encoder's committed state is left untouched so the
+    already-emitted container stays valid."""
+
+
+class SessionError(PermanentError):
+    """Base for live-session failures (unknown/closed session, bad seq)."""
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        session_id: Optional[str] = None,
+        stage: str = "session",
+        cause: Optional[BaseException] = None,
+    ):
+        super().__init__(message, stage=stage, cause=cause)
+        self.session_id = session_id
+
+
+class SessionNotFound(SessionError):
+    """The session id is unknown to this manager — never opened, already
+    finalized/aborted, or evicted by lease expiry.  The message says which,
+    so a client can distinguish "retry against the finalized container" from
+    "open a new session"."""
+
+
+class SessionSequenceError(SessionError, ValueError):
+    """The client-assigned frame sequence number is unusable: a gap (frames
+    would be silently skipped), a regression (negative / non-monotonic in a
+    way no receipt covers), or a duplicate seq re-sent with *different* frame
+    content (an idempotent retry must carry the same payload).  Structured
+    reject — the session itself stays open and appendable."""
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        session_id: Optional[str] = None,
+        expected: Optional[int] = None,
+        got: Optional[int] = None,
+        cause: Optional[BaseException] = None,
+    ):
+        super().__init__(message, session_id=session_id, cause=cause)
+        self.expected = expected
+        self.got = got
 
 
 class DeadlineExceeded(PermanentError):

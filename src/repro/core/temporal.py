@@ -73,7 +73,12 @@ import numpy as np
 
 from repro.core.edits import EncodedEdits, decode_edits
 from repro.core.engine import CorrectionEngine, default_engine
-from repro.core.errors import BlobCorruptError, FFCzError, InfeasibleBound
+from repro.core.errors import (
+    BlobCorruptError,
+    FFCzError,
+    InfeasibleBound,
+    StreamStateError,
+)
 from repro.core.ffcz import FFCz, FFCzBlob, FFCzConfig
 
 __all__ = [
@@ -335,10 +340,17 @@ class StreamEncoder:
     :meth:`finish` assembles the ``FFCS`` container.  Encoder state (decoded
     history, warm spectrum, frame list) mutates only after a frame fully
     succeeds, so a failed ``add_frame`` can be retried — the serving layer's
-    per-frame retry ladder relies on this.
+    per-frame retry ladder relies on this.  ``finish()`` is terminal:
+    ``add_frame`` after it (or a second ``finish()``) raises
+    :class:`~repro.core.errors.StreamStateError` instead of silently
+    mutating/re-emitting against committed state — the session layer's
+    finalize-vs-append serialization depends on this invariant.
 
     ``frame_stats`` records, per frame, ``{"keyframe", "iterations",
     "converged"}`` — the warm-vs-cold bench reads the iteration counts.
+    :meth:`export_state` snapshots the committed state as plain data; the
+    matching import hook is :meth:`TemporalCodec.restore_stream` (session
+    crash recovery / spill-resume).
     """
 
     def __init__(self, codec: "TemporalCodec"):
@@ -350,13 +362,45 @@ class StreamEncoder:
         self._block = 0
         self._E0: Optional[float] = None
         self._Delta0: Optional[float] = None
+        self._finished = False
         self.frame_stats: List[dict] = []
 
     @property
     def n_frames(self) -> int:
         return len(self._frames)
 
+    @property
+    def finished(self) -> bool:
+        return self._finished
+
+    @property
+    def history_nbytes(self) -> int:
+        """Resident decoded-history footprint — what session spill eviction
+        reclaims (payload bytes stay journaled, not resident)."""
+        return int(sum(h.nbytes for h in self._history))
+
+    def export_state(self) -> dict:
+        """The committed stream state as plain data: frame payloads + the
+        scalars :meth:`TemporalCodec.restore_stream` needs to rebuild a live
+        encoder.  Decoded history and the warm spectrum are derived state and
+        deliberately excluded — history re-decodes bitwise from the payloads,
+        and the first post-restore frame runs cold (bound-conformant either
+        way; bitwise-identical under the default ``warm_start=False``)."""
+        return {
+            "frames": list(self._frames),
+            "shape": self._shape,
+            "block": self._block,
+            "E0": self._E0,
+            "Delta0": self._Delta0,
+        }
+
     def add_frame(self, x: np.ndarray) -> bytes:
+        if self._finished:
+            raise StreamStateError(
+                "add_frame on a finished stream: finish() already assembled "
+                "the container",
+                stage="encode",
+            )
         codec = self._codec
         x32 = np.asarray(x, dtype=np.float32)
         if x32.size == 0:
@@ -393,6 +437,12 @@ class StreamEncoder:
         return payload
 
     def finish(self) -> bytes:
+        if self._finished:
+            raise StreamStateError(
+                "finish() called twice on one stream: the container was "
+                "already assembled",
+                stage="encode",
+            )
         if not self._frames:
             raise ValueError("cannot finish an empty stream")
         codec = self._codec
@@ -417,6 +467,7 @@ class StreamEncoder:
             off += len(payload)
         head = header + index
         head += struct.pack("<I", zlib.crc32(head))
+        self._finished = True
         return head + b"".join(p for p, _ in self._frames)
 
 
@@ -459,6 +510,74 @@ class TemporalCodec:
 
     def open_stream(self) -> StreamEncoder:
         return StreamEncoder(self)
+
+    def restore_stream(
+        self,
+        frames: Sequence[Tuple[bytes, bool]],
+        *,
+        shape: Sequence[int],
+        block: int = 0,
+        E0: float,
+        Delta0: float,
+    ) -> StreamEncoder:
+        """Rebuild a live :class:`StreamEncoder` from committed frame
+        payloads — the state-import hook behind session crash recovery and
+        spill-resume (the matching export is
+        :meth:`StreamEncoder.export_state`).
+
+        ``frames`` is the committed ``(payload, is_keyframe)`` list; ``shape``
+        / ``block`` / ``E0`` / ``Delta0`` are the stream scalars resolved on
+        frame 0.  The predictor history is re-decoded from the latest
+        keyframe forward (the only frames a continuation depends on) — the
+        same chain the decoder walks, so appends to the restored encoder are
+        bitwise-identical to appends to the uninterrupted one.  The warm
+        spectrum is not restorable state: the first post-restore frame runs
+        cold (identical bytes under the default ``warm_start=False``).
+
+        Raises :class:`BlobCorruptError` when a payload in the replayed chain
+        does not decode, and when the keyframe flags disagree with this
+        codec's ``keyframe_interval`` (a journal from a different stream
+        config must not be silently continued).
+        """
+        frames = [(bytes(p), bool(k)) for p, k in frames]
+        if not frames:
+            raise ValueError("cannot restore an empty stream; open a fresh one")
+        interval = self.stream.keyframe_interval
+        for t, (_payload, is_key) in enumerate(frames):
+            if is_key != (t % interval == 0):
+                raise BlobCorruptError(
+                    f"restored frame {t} keyframe flag disagrees with "
+                    f"keyframe_interval={interval}: the journal belongs to a "
+                    "different stream config"
+                )
+        shape = tuple(int(s) for s in shape)
+        block = int(block) if self.stream.mode == "pencils" else 0
+        if self.stream.mode == "pencils" and block == 0:
+            block = self._resolve_block(shape)
+        k = max(t for t, (_p, key) in enumerate(frames) if key)
+        history: List[np.ndarray] = []
+        for t in range(k, len(frames)):
+            payload, is_key = frames[t]
+            decoded = self._decode_payload_raw(payload, self.stream.mode, shape)
+            if is_key:
+                history = [decoded]
+            else:
+                pred = _predict(history, self.stream.predictor)
+                x = (pred + decoded.astype(np.float64)).astype(np.float32)
+                history = (history + [x])[-2:]
+        enc = self.open_stream()
+        enc._frames = frames
+        enc._history = history
+        enc._warm = None
+        enc._shape = shape
+        enc._block = block
+        enc._E0 = float(E0)
+        enc._Delta0 = float(Delta0)
+        enc.frame_stats = [
+            {"keyframe": key, "iterations": 0, "converged": None, "restored": True}
+            for _p, key in frames
+        ]
+        return enc
 
     def compress_stream(self, frames: Sequence[np.ndarray]) -> bytes:
         """Compress a whole sequence into one ``FFCS`` container."""
@@ -661,13 +780,18 @@ class TemporalCodec:
         return x
 
     def _decode_payload(self, s: TemporalStream, payload: bytes) -> np.ndarray:
-        if s.mode == "pencils":
+        return self._decode_payload_raw(payload, s.mode, s.shape)
+
+    def _decode_payload_raw(
+        self, payload: bytes, mode: str, shape: Tuple[int, ...]
+    ) -> np.ndarray:
+        if mode == "pencils":
             out = decode_pencil_blob(payload, self.base)
         else:
             out = self._ffcz.decompress(FFCzBlob.from_bytes(payload))
-        if out.shape != s.shape:
+        if out.shape != tuple(shape):
             raise BlobCorruptError(
                 f"corrupt FFCS stream: frame decodes to shape {out.shape}, "
-                f"header says {s.shape}"
+                f"header says {tuple(shape)}"
             )
         return out

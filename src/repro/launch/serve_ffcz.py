@@ -1,10 +1,13 @@
 """FFCz compression service entry point with a built-in load generator.
 
 Drives :class:`repro.serving.ffcz_service.FFCzService` with a synthetic
-mixed workload (whole-field + pencil compressions + decodes, a fraction of
-them deliberately corrupted) under optional deterministic fault injection,
-then prints the outcome table, latency percentiles, stage timers, and the
-service's failure-machinery counters.
+mixed workload (whole-field + pencil compressions + decodes, optionally a
+``--session-frac`` slice of live-session frame appends with duplicate
+retries, a fraction of decodes deliberately corrupted) under optional
+deterministic fault injection, then prints the outcome table, latency
+percentiles, stage timers, and the service's failure-machinery counters.
+Session write-ahead journals are in-memory unless ``--session-journal-dir``
+points at a directory for file-backed WALs.
 
     PYTHONPATH=src python -m repro.launch.serve_ffcz --requests 16
     PYTHONPATH=src python -m repro.launch.serve_ffcz --requests 32 \
@@ -30,7 +33,9 @@ from typing import List, Optional
 import numpy as np
 
 from repro.compressors import get_compressor
+from repro.core.errors import ResourceExhausted
 from repro.core.ffcz import FFCzConfig
+from repro.core.temporal import TemporalConfig
 from repro.runtime.faults import FaultConfig, FaultInjector
 from repro.serving.ffcz_service import FFCzService, ServiceConfig
 
@@ -47,6 +52,14 @@ def add_service_args(ap: argparse.ArgumentParser) -> None:
         "--pipeline-depth", type=int, default=2,
         help="in-flight units: 1 = serial, >=2 overlaps host ENCODE with device EXECUTE",
     )
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="admission cap on queued requests (0 = unbounded)")
+    ap.add_argument("--max-sessions", type=int, default=8,
+                    help="admission cap on live stream sessions")
+    ap.add_argument("--session-lease", type=float, default=60.0,
+                    help="session lease seconds, refreshed on append")
+    ap.add_argument("--session-journal-dir", default="",
+                    help="directory for file-backed session WAL journals (default: in-memory)")
 
 
 def add_workload_args(ap: argparse.ArgumentParser) -> None:
@@ -59,6 +72,10 @@ def add_workload_args(ap: argparse.ArgumentParser) -> None:
                     help="fraction of compressions taking the blockwise path")
     ap.add_argument("--corrupt-frac", type=float, default=0.0,
                     help="fraction of decode requests fed corrupted bytes")
+    ap.add_argument("--session-frac", type=float, default=0.0,
+                    help="fraction of requests arriving as live-session frame appends")
+    ap.add_argument("--session-frames", type=int, default=3,
+                    help="frames per generated session (plus a duplicate retry + finalize)")
 
 
 def add_fault_args(ap: argparse.ArgumentParser) -> None:
@@ -68,6 +85,10 @@ def add_fault_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--p-oom", type=float, default=0.0, help="device OOM probability")
     ap.add_argument("--p-slow", type=float, default=0.0, help="slow-request probability")
     ap.add_argument("--slow-s", type=float, default=0.0, help="injected slowness (seconds)")
+    ap.add_argument("--p-session-append", type=float, default=0.0,
+                    help="session append fault probability (pre-encode)")
+    ap.add_argument("--p-session-journal", type=float, default=0.0,
+                    help="session WAL write fault probability (post-encode)")
     ap.add_argument("--max-per-site", type=int, default=2,
                     help="fire cap per (fault site, request)")
 
@@ -96,7 +117,8 @@ def flag_table() -> str:
 
 
 def build_injector(args) -> Optional[FaultInjector]:
-    if not (args.p_codec or args.p_dispatch or args.p_oom or args.p_slow):
+    if not (args.p_codec or args.p_dispatch or args.p_oom or args.p_slow
+            or args.p_session_append or args.p_session_journal):
         return None
     return FaultInjector(
         FaultConfig(
@@ -105,6 +127,8 @@ def build_injector(args) -> Optional[FaultInjector]:
             p_oom=args.p_oom,
             p_slow=args.p_slow,
             slow_s=args.slow_s,
+            p_session_append=args.p_session_append,
+            p_session_journal=args.p_session_journal,
             max_per_site=args.max_per_site,
         ),
         seed=args.seed,
@@ -123,6 +147,10 @@ def build_service(args, pipeline_depth: Optional[int] = None) -> FFCzService:
             max_retries=args.max_retries,
             seed=args.seed,
             pipeline_depth=args.pipeline_depth if pipeline_depth is None else pipeline_depth,
+            max_queue=args.max_queue,
+            max_sessions=args.max_sessions,
+            session_lease_s=args.session_lease,
+            session_journal_dir=args.session_journal_dir,
         ),
         injector=build_injector(args),
     )
@@ -133,13 +161,39 @@ def field_config(args) -> FFCzConfig:
                       verify=False, crc=args.crc)
 
 
+def submit_session(svc: FFCzService, rng: np.random.Generator, args) -> List[str]:
+    """Queue one live session's workload: ``--session-frames`` coherent
+    appends, one duplicate retry of the last frame, and a finalize.  Falls
+    back to a whole-field request when session admission rejects."""
+    cfg = field_config(args)
+    edge = args.field_size
+    try:
+        sid = svc.open_session(cfg, TemporalConfig(mode="field", keyframe_interval=4))
+    except ResourceExhausted:
+        return [svc.submit_compress(rng.standard_normal((edge, edge)).astype(np.float32), cfg)]
+    uids = []
+    x = rng.standard_normal((edge, edge)).astype(np.float32)
+    n_frames = max(1, args.session_frames)
+    for t in range(n_frames):
+        last = x
+        uids.append(svc.submit_append(sid, t, x))
+        x = x + 0.05 * rng.standard_normal((edge, edge)).astype(np.float32)
+    # a client retry after an ambiguous failure: same seq, same content
+    uids.append(svc.submit_append(sid, n_frames - 1, last))
+    uids.append(svc.submit_finalize(sid))
+    return uids
+
+
 def submit_mixed(svc: FFCzService, rng: np.random.Generator, args, n: int) -> List[str]:
     """Queue ``n`` mixed compression requests drawn from the workload flags."""
     cfg = field_config(args)
     edge = args.field_size
     uids = []
     for _ in range(n):
-        if rng.random() < args.pencil_frac:
+        draw = rng.random()
+        if draw < args.session_frac:
+            uids.extend(submit_session(svc, rng, args))
+        elif draw < args.session_frac + (1 - args.session_frac) * args.pencil_frac:
             size = int(rng.integers(args.block // 2, 4 * args.block))
             uids.append(svc.submit_pencils(rng.standard_normal(size).astype(np.float32),
                                            args.e_rel, args.delta_rel))
@@ -172,8 +226,9 @@ def main():
     submit_mixed(svc, rng, args, args.requests)
     responses = dict(svc.drain())
 
-    # feed a sample of the produced blobs back through decode
-    blobs = [r.payload for r in responses.values() if r.ok]
+    # feed a sample of the produced blobs back through decode (session
+    # appends ack with receipts, not bytes — only containers decode)
+    blobs = [r.payload for r in responses.values() if r.ok and isinstance(r.payload, bytes)]
     for i, blob in enumerate(blobs):
         if args.corrupt_frac and rng.random() < args.corrupt_frac:
             blob = injector.corrupt_blob(blob) if injector else blob[: len(blob) // 2]
@@ -189,7 +244,14 @@ def main():
         lat.append(r.stats.latency_s)
         rungs = ",".join(r.stats.rungs) or "-"
         if r.ok:
-            size = len(r.payload) if isinstance(r.payload, bytes) else r.payload.size
+            if isinstance(r.payload, bytes):
+                size = len(r.payload)
+            elif hasattr(r.payload, "n_bytes"):  # session FrameReceipt
+                size = r.payload.n_bytes
+            elif hasattr(r.payload, "size"):  # decompressed ndarray
+                size = r.payload.size
+            else:  # flush byte counts, abort acks
+                size = r.payload
             print(f"{uid:>8}  ok        rungs={rungs}  bytes/elems={size}")
         else:
             print(f"{uid:>8}  REJECTED  rungs={rungs}  {r.error['type']}: {r.error['message']}")

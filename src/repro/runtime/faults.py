@@ -31,6 +31,14 @@ Injection sites mirror the real failure surface of the pipeline:
   ``slow``      the request takes ``slow_s`` longer than it should (tests the
                 deadline path; returned as a delay, never an exception)
 
+  ``session_append``   live-session append fails before the frame is encoded
+                (``RuntimeError``-shaped -> retried); fired with the append
+                request's uid so the sequence stays scheduling-invariant
+  ``session_journal``  the write-ahead journal append fails after the frame
+                encoded (``OSError``-shaped -> retried); the session keeps
+                the encoded-but-unjournaled frame pending so the retry
+                re-journals without re-encoding
+
 plus two pure byte-corruption helpers (``flip_bit`` / ``truncate``) for the
 decode-hardening fuzz tests (these draw from a plain shared stream — they
 are test-harness primitives, not service-threaded sites).
@@ -75,10 +83,23 @@ class InjectedOOM(RuntimeError):
         super().__init__(f"RESOURCE_EXHAUSTED: {message}")
 
 
+class InjectedJournalError(OSError):
+    """Injected session-journal write failure (``OSError``-shaped, so it
+    classifies as HostCodecError -> retried; the write-ahead discipline means
+    the un-acked frame is simply re-journaled on the retry)."""
+
+
+class InjectedAppendError(RuntimeError):
+    """Injected session-append failure before the frame is encoded
+    (``RuntimeError``-shaped -> DeviceDispatchError -> retried)."""
+
+
 _SITE_ERRORS = {
     "codec": InjectedCodecError,
     "dispatch": InjectedDispatchError,
     "oom": InjectedOOM,
+    "session_journal": InjectedJournalError,
+    "session_append": InjectedAppendError,
 }
 
 
@@ -90,6 +111,8 @@ class FaultConfig:
     p_dispatch: float = 0.0
     p_oom: float = 0.0
     p_slow: float = 0.0
+    p_session_journal: float = 0.0
+    p_session_append: float = 0.0
     slow_s: float = 0.0  # extra latency charged to a request when "slow" fires
     # Per-(site, request) fire cap: after this many fires a site goes quiet
     # for that request, so even p=1.0 faults stay transient and the retry
@@ -103,6 +126,8 @@ class FaultConfig:
                 "dispatch": self.p_dispatch,
                 "oom": self.p_oom,
                 "slow": self.p_slow,
+                "session_journal": self.p_session_journal,
+                "session_append": self.p_session_append,
             }[site]
         except KeyError:
             raise ValueError(f"unknown fault site {site!r}") from None

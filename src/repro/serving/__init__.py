@@ -8,6 +8,13 @@ from repro.serving.ffcz_service import (
     ServiceResponse,
     decode_pencil_blob,
 )
+from repro.serving.sessions import (
+    FileJournal,
+    FrameReceipt,
+    MemoryJournal,
+    SessionStats,
+    StreamSessionManager,
+)
 
 __all__ = [
     "ServingEngine",
@@ -17,4 +24,9 @@ __all__ = [
     "ServiceResponse",
     "RequestStats",
     "decode_pencil_blob",
+    "StreamSessionManager",
+    "SessionStats",
+    "FrameReceipt",
+    "MemoryJournal",
+    "FileJournal",
 ]

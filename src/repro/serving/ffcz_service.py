@@ -14,6 +14,11 @@ with a request queue admitting heterogeneous (shape, dtype, bound) work:
                           compressed as ONE unit — the frame chain is
                           sequential, so per-stream frame order is preserved
                           by construction while other units still overlap
+  live session            incremental frame arrival (``open_session`` /
+                          ``submit_append`` / ``submit_finalize``) over the
+                          durable session layer (serving/sessions.py):
+                          write-ahead journaled, idempotent under retry,
+                          lease-bounded, admission-controlled
   decompress              hardened decode of service pencil blobs, FFCS
                           streams, or FFCz blobs
 
@@ -77,6 +82,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
@@ -106,6 +112,7 @@ from repro.core.temporal import (  # noqa: F401 - decode_pencil_blob re-exported
     _pencil_blob,
     decode_pencil_blob,
 )
+from repro.serving.sessions import FileJournal, StreamSessionManager
 
 __all__ = [
     "ServiceConfig",
@@ -142,6 +149,19 @@ class ServiceConfig:
     # (fence + encode) of up to depth units runs on the worker thread while
     # the scheduler front-half dispatches the next units' device work.
     pipeline_depth: int = 2
+    # Admission control (docs/serving.md): submits beyond max_queue queued
+    # requests raise ResourceExhausted (stage "admit") instead of growing the
+    # queue without bound; 0 disables the cap.  The session knobs
+    # parameterize the live-session manager (serving/sessions.py):
+    # max_sessions live sessions, session_lease_s lease refreshed on append,
+    # session_history_bytes of resident decoded history before idle sessions
+    # spill to their journals (0 = unbounded), and session_journal_dir for
+    # file-backed write-ahead journals ("" = in-memory sinks).
+    max_queue: int = 1024
+    max_sessions: int = 8
+    session_lease_s: float = 60.0
+    session_history_bytes: int = 0
+    session_journal_dir: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,10 +191,11 @@ class ServiceResponse:
 @dataclasses.dataclass
 class _Request:
     uid: str
-    kind: str  # "field" | "pencils" | "stream" | "decompress"
+    kind: str  # "field" | "pencils" | "stream" | "session" | "decompress"
     payload: Any
     # FFCzConfig (field) | (E_rel, Delta_rel) (pencils)
-    # | (FFCzConfig, TemporalConfig) (stream) | None (decompress)
+    # | (FFCzConfig, TemporalConfig) (stream) | (op, session_id, seq)
+    # (session) | None (decompress)
     cfg: Any
     deadline_s: float
     seq: int = 0  # submission order (drain() response ordering)
@@ -203,6 +224,8 @@ class _Staged:
       field       ``plan`` / ``base_blob`` / ``eps0`` plus the attempt-1
                   dispatch, or ``done`` when the request rejected at front
       stream      nothing staged — the frame chain is sequential, all BACK
+      session     nothing staged — session state mutates on the single
+                  worker only, which is what makes per-session FIFO hold
       decompress  nothing staged — decode is pure host work, all BACK
     """
 
@@ -272,10 +295,34 @@ class FFCzService:
         # in-flight ring: (unit requests, back-half future), oldest first
         self._ring: Deque[Tuple[List[_Request], Future]] = collections.deque()
         self._worker: Optional[ThreadPoolExecutor] = None
+        # live stream sessions (serving/sessions.py): shares the service
+        # clock (frozen-clock tests freeze leases too) and the injector (the
+        # session_* chaos sites fire with the append request's uid)
+        journal_factory = None
+        if config.session_journal_dir:
+            jdir = config.session_journal_dir
+            os.makedirs(jdir, exist_ok=True)
+            journal_factory = lambda sid: FileJournal(os.path.join(jdir, f"{sid}.wal"))  # noqa: E731
+        self.sessions = StreamSessionManager(
+            base,
+            engine=self.engine,
+            max_sessions=config.max_sessions,
+            lease_s=config.session_lease_s,
+            max_history_bytes=config.session_history_bytes,
+            clock=clock,
+            injector=injector,
+            journal_factory=journal_factory,
+        )
 
     # -- admission ---------------------------------------------------------
 
     def _admit(self, req: _Request) -> str:
+        if self.config.max_queue and len(self._queue) >= self.config.max_queue:
+            raise ResourceExhausted(
+                f"admission rejected: {len(self._queue)} queued requests "
+                f">= max_queue={self.config.max_queue}",
+                stage="admit",
+            )
         req.t0 = self._clock()
         req.seq = self._next_seq
         self._next_seq += 1
@@ -376,6 +423,90 @@ class FFCzService:
                 deadline_s=self.config.deadline_s if deadline_s is None else deadline_s,
             )
         )
+
+    # -- live sessions (serving/sessions.py) --------------------------------
+
+    def open_session(
+        self,
+        cfg: FFCzConfig = FFCzConfig(),
+        stream: TemporalConfig = TemporalConfig(),
+        session_id: Optional[str] = None,
+        lease_s: Optional[float] = None,
+    ) -> str:
+        """Admit a live stream session (synchronous — admission is
+        bookkeeping, not device work).  Raises
+        :class:`~repro.core.errors.ResourceExhausted` at ``max_sessions``."""
+        return self.sessions.open_session(
+            cfg, stream, session_id=session_id, lease_s=lease_s
+        )
+
+    def _submit_session(
+        self, op: str, session_id: str, seq: int, frame: Any, uid: Optional[str],
+        deadline_s: Optional[float],
+    ) -> str:
+        return self._admit(
+            _Request(
+                uid=self._uid(uid),
+                kind="session",
+                payload=frame,
+                cfg=(op, session_id, seq),
+                deadline_s=self.config.deadline_s if deadline_s is None else deadline_s,
+            )
+        )
+
+    def submit_append(
+        self,
+        session_id: str,
+        seq: int,
+        frame: np.ndarray,
+        uid: Optional[str] = None,
+        deadline_s: Optional[float] = None,
+    ) -> str:
+        """Queue one incremental frame append to a live session.
+
+        The response payload is the frame's durable
+        :class:`~repro.serving.sessions.FrameReceipt` — minted only after
+        the write-ahead journal holds the frame, so an acked append survives
+        a crash.  Duplicate seqs are idempotent; gaps reject with
+        :class:`~repro.core.errors.SessionSequenceError`.  Session units run
+        entirely in the back half on the single encode worker, so appends
+        and finalizes for one session retire in submission order (per-
+        session FIFO) at every pipeline depth.
+        """
+        frame = np.asarray(frame)
+        if frame.size == 0:
+            raise ValueError("cannot append an empty frame")
+        return self._submit_session("append", session_id, int(seq), frame, uid, deadline_s)
+
+    def submit_session_flush(
+        self,
+        session_id: str,
+        uid: Optional[str] = None,
+        deadline_s: Optional[float] = None,
+    ) -> str:
+        """Queue a journal flush barrier; the response payload is the
+        session's durable journal byte count."""
+        return self._submit_session("flush", session_id, -1, None, uid, deadline_s)
+
+    def submit_finalize(
+        self,
+        session_id: str,
+        uid: Optional[str] = None,
+        deadline_s: Optional[float] = None,
+    ) -> str:
+        """Queue session finalization; the response payload is the ``FFCS``
+        container (byte-identical to ``submit_stream`` over the same frames
+        under the default ``warm_start=False``)."""
+        return self._submit_session("finalize", session_id, -1, None, uid, deadline_s)
+
+    def submit_abort(
+        self,
+        session_id: str,
+        uid: Optional[str] = None,
+        deadline_s: Optional[float] = None,
+    ) -> str:
+        """Queue a session abort (drops the session; no container)."""
+        return self._submit_session("abort", session_id, -1, None, uid, deadline_s)
 
     def submit_decompress(
         self,
@@ -602,10 +733,12 @@ class FFCzService:
                 return self._front_pencils(unit)
             if kind == "field":
                 return self._front_field(unit[0])
-            # stream: the frame chain is strictly sequential (each frame's
-            # predictor and warm state depend on the previous frame's
-            # results), so there is nothing to pre-dispatch — the whole unit
-            # runs in the back half, overlapping OTHER units at depth >= 2
+            # stream/session/decompress: nothing to pre-dispatch — the whole
+            # unit runs in the back half, overlapping OTHER units at
+            # depth >= 2.  Streams because the frame chain is sequential;
+            # sessions additionally because running every session op on the
+            # one ordered worker is what serializes a finalize racing queued
+            # appends (per-session FIFO).
             return _Staged(kind=kind, unit=unit)
         finally:
             self._tick("front_s", t0)
@@ -621,6 +754,12 @@ class FFCzService:
             t0 = self._clock()
             try:
                 return [self._run_stream(staged.unit[0])]
+            finally:
+                self._tick("execute_s", t0)
+        if staged.kind == "session":
+            t0 = self._clock()
+            try:
+                return [self._run_session(staged.unit[0])]
             finally:
                 self._tick("execute_s", t0)
         t0 = self._clock()
@@ -974,6 +1113,49 @@ class FFCzService:
             return self._reject(req, err)
         except Exception as e:  # noqa: BLE001
             return self._reject(req, classify_exception(e, "execute"))
+
+    # -- live session path -------------------------------------------------
+
+    def _run_session(self, req: _Request) -> ServiceResponse:
+        """Run one session op on the encode worker (or inline at depth 1).
+
+        Appends go through the retry machinery: the manager's session sites
+        fire with this request's uid, injected journal failures leave the
+        frame pending (re-journaled on retry, not re-encoded), and terminal
+        session errors — sequence gaps, closed sessions, exhausted budgets —
+        reject structured like every other kind.
+        """
+        op, sid, seq = req.cfg
+        try:
+            self._check_deadline(req)
+            if op == "append":
+
+                def _append():
+                    return self.sessions.append_frame(
+                        sid, seq, req.payload, fire_uid=req.uid
+                    )
+
+                receipt = self._attempt(req, "execute", _append)
+                req.converged = receipt.converged
+                return self._complete(req, receipt)
+            if op == "finalize":
+                payload = self._attempt(
+                    req,
+                    "execute",
+                    lambda: self.sessions.finalize(sid, fire_uid=req.uid),
+                )
+                return self._complete(req, payload)
+            if op == "flush":
+                n = self._attempt(req, "execute", lambda: self.sessions.flush(sid))
+                return self._complete(req, n)
+            if op == "abort":
+                self.sessions.abort(sid)
+                return self._complete(req, None)
+            raise ValueError(f"unknown session op {op!r}")
+        except FFCzError as err:
+            return self._reject(req, err)
+        except Exception as e:  # noqa: BLE001
+            return self._reject(req, classify_exception(e, "session"))
 
     # -- decode path -------------------------------------------------------
 

@@ -377,6 +377,196 @@ class TestBlobDecodeHardening:
                 decode_pencil_blob(payload[:keep], base)
 
 
+def _session_frames(n, seed, shape=(12, 12)):
+    rng = np.random.default_rng(seed)
+    base = (rng.standard_normal(shape) * 0.5 + 4.0).cumsum(axis=0)
+    return [
+        np.ascontiguousarray(
+            base + 0.05 * t + 0.01 * rng.standard_normal(shape), np.float32
+        )
+        for t in range(n)
+    ]
+
+
+class TestSessionChaos:
+    """ISSUE 10: live sessions under injected append/journal faults.
+
+    The gated claims: the mixed session workload fully drains with
+    structured outcomes at both pipeline depths with IDENTICAL per-request
+    results and counters (the session sites fire from per-uid substreams);
+    a duplicate-append retry stays idempotent under chaos; and admission
+    (``max_sessions``) rejects with ResourceExhausted at both depths.
+    """
+
+    # max_per_site=1 keeps every injected failure within the retry budget
+    # (one append fires at most one append-site + one journal-site fault),
+    # so appends always land and the bitwise-oracle claim stays checkable
+    CHAOS = FaultConfig(
+        p_session_append=0.4, p_session_journal=0.4, p_codec=0.3, max_per_site=1
+    )
+
+    def _run(self, depth):
+        from repro.core.errors import ResourceExhausted
+        from repro.core.temporal import TemporalConfig
+
+        inj = FaultInjector(self.CHAOS, seed=SEED)
+        svc = _service(inj, pipeline_depth=depth, max_sessions=2, max_queue=64)
+        rng = np.random.default_rng(SEED)
+        cfg = _field_cfg()
+        stream = TemporalConfig(mode="field", keyframe_interval=2)
+        a = _session_frames(4, seed=3)
+        b = _session_frames(4, seed=5)
+        sa = svc.open_session(cfg, stream, session_id="sa")
+        sb = svc.open_session(cfg, stream, session_id="sb")
+        # admission is chaos-gated too: the third live session rejects
+        # identically at every depth
+        with pytest.raises(ResourceExhausted) as admit:
+            svc.open_session(cfg, stream, session_id="sc")
+        assert admit.value.stage == "admit"
+        # everything below queues BEFORE the drain so queue depth (and any
+        # admission decision) cannot depend on pipeline depth
+        uids = []
+        for t in range(4):
+            uids.append(svc.submit_append(sa, t, a[t], uid=f"sa-{t}"))
+            uids.append(svc.submit_append(sb, t, b[t], uid=f"sb-{t}"))
+            if t == 1:
+                uids.append(
+                    svc.submit_pencils(
+                        rng.standard_normal(100).astype(np.float32), 1e-3, 1e-3
+                    )
+                )
+        # a client retry after an ambiguous failure: same seq, same content
+        dup = svc.submit_append(sa, 3, a[3], uid="sa-dup")
+        # and a buggy client: a gap, rejected structurally
+        gap = svc.submit_append(sb, 9, b[3], uid="sb-gap")
+        fin = svc.submit_finalize(sa, uid="sa-fin")
+        ab = svc.submit_abort(sb, uid="sb-abort")
+        uids += [dup, gap, fin, ab]
+        res = svc.drain()
+        svc.close()
+        per_request = [
+            (
+                u,
+                res[u].ok,
+                res[u].stats.rungs,
+                res[u].stats.attempts,
+                None if res[u].ok else res[u].error["type"],
+            )
+            for u in uids
+        ]
+        return per_request, dict(svc.counters), dict(svc.sessions.counters), res
+
+    @pytest.mark.parametrize("depth", [1, 2])
+    def test_session_workload_drains_structured(self, depth):
+        per_request, counters, scounters, res = self._run(depth)
+        assert counters["completed"] + counters["rejected"] == len(per_request)
+        assert counters["retries"] > 0, "chaos probabilities never fired"
+        # duplicate-append idempotency holds under chaos: cached receipt,
+        # original digest, nothing re-appended
+        assert res["sa-dup"].ok
+        assert res["sa-dup"].payload.duplicate
+        assert res["sa-dup"].payload.digest == res["sa-3"].payload.digest
+        # the gap rejects structurally, and the session survives to abort
+        assert not res["sb-gap"].ok
+        assert res["sb-gap"].error["type"] == "SessionSequenceError"
+        assert res["sb-abort"].ok
+        # injected faults never corrupt the stream: the finalized container
+        # is bitwise the fault-free whole-sequence oracle
+        from repro.core.temporal import TemporalCodec, TemporalConfig
+
+        codec = TemporalCodec(
+            get_compressor("szlike"), _field_cfg(),
+            stream=TemporalConfig(mode="field", keyframe_interval=2),
+        )
+        assert res["sa-fin"].payload == codec.compress_stream(_session_frames(4, seed=3))
+        assert scounters["duplicates"] == 1
+        assert scounters["sequence_rejects"] == 1
+        assert scounters["finalized"] == 1 and scounters["aborted"] == 1
+
+    def test_depth_parity(self):
+        """Same fault seed -> identical per-request outcomes, rung
+        sequences, attempt counts, and both counter families, serial vs
+        pipelined — the session sites draw from per-uid substreams."""
+        serial = self._run(1)
+        pipelined = self._run(2)
+        assert serial[0] == pipelined[0]
+        assert serial[1] == pipelined[1]
+        assert serial[2] == pipelined[2]
+
+
+class TestStreamContainerFuzz:
+    """ISSUE 10 satellite: FFCS container fuzz over a multi-keyframe stream.
+
+    Truncation at every frame boundary and index bit flips reject at parse;
+    a payload bit flip either leaves a frame's decode chain intact (bitwise
+    the original) or raises BlobCorruptError — NEVER silently wrong data.
+    Field mode runs with crc=True (payload CRC tails are what detect the
+    flip); pencil payloads carry an unconditional CRC.
+    """
+
+    def _stream(self, mode):
+        from repro.core.temporal import TemporalCodec, TemporalConfig, TemporalStream
+
+        cfg_kw = dict(crc=True) if mode == "field" else {}
+        codec = TemporalCodec(
+            get_compressor("szlike"),
+            _field_cfg(**cfg_kw),
+            stream=TemporalConfig(mode=mode, keyframe_interval=2),
+        )
+        frames = _session_frames(6, seed=11)
+        data = codec.compress_stream(frames)
+        return codec, frames, data, TemporalStream.from_bytes(data)
+
+    @pytest.mark.parametrize("mode", ["field", "pencils"])
+    def test_truncation_at_every_frame_boundary_rejects(self, mode):
+        from repro.core.temporal import TemporalStream
+
+        codec, _frames_, data, s = self._stream(mode)
+        boundaries = [s.frames_base + off for off, _len, _k in s.entries]
+        for cut in boundaries:
+            with pytest.raises(BlobCorruptError):
+                TemporalStream.from_bytes(data[:cut])
+            with pytest.raises(BlobCorruptError):
+                codec.decompress_stream(data[:cut])
+
+    @pytest.mark.parametrize("mode", ["field", "pencils"])
+    def test_index_bit_flips_reject_at_parse(self, mode):
+        from repro.core.temporal import TemporalStream
+
+        _codec_, _frames_, data, s = self._stream(mode)
+        rng = np.random.default_rng(SEED)
+        # anywhere in the CRC'd header+index prefix, incl. the offset table
+        for pos in rng.integers(5, s.frames_base - 4, 25).tolist():
+            bad = bytearray(data)
+            bad[pos] ^= 1 << int(rng.integers(0, 8))
+            with pytest.raises(BlobCorruptError):
+                TemporalStream.from_bytes(bytes(bad))
+
+    @pytest.mark.parametrize("mode", ["field", "pencils"])
+    def test_payload_bit_flips_never_decode_wrong_data(self, mode):
+        codec, _frames_, data, s = self._stream(mode)
+        original = codec.decompress_stream(data)
+        rng = np.random.default_rng(SEED)
+        for j in range(s.n_frames):
+            off, length, _k = s.entries[j]
+            start = s.frames_base + off
+            for pos in rng.integers(start, start + length, 3).tolist():
+                bad = bytearray(data)
+                bad[pos] ^= 1 << int(rng.integers(0, 8))
+                bad = bytes(bad)
+                for t in range(s.n_frames):
+                    chain = range(s.latest_keyframe(t), t + 1)
+                    if j in chain:
+                        # the damaged frame is in t's decode chain: the
+                        # payload CRC must catch it
+                        with pytest.raises(BlobCorruptError):
+                            codec.decode_frame(bad, t)
+                    else:
+                        # seek decode from the latest intact keyframe is
+                        # untouched by the damage — bitwise the original
+                        assert np.array_equal(codec.decode_frame(bad, t), original[t])
+
+
 class TestCrcTail:
     def test_crc_roundtrip_and_parity(self, rng):
         x = rng.standard_normal((16, 16)).astype(np.float32)

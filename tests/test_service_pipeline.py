@@ -217,3 +217,81 @@ class TestAsyncEngineTwins:
         svc.close()
         # 4 tensors x ceil(100/64)=2 rows -> one cached (8, 64) buffer, reused
         assert list(svc._staging) == [(8, 64)]
+
+
+class TestSessionFifo:
+    """ISSUE 10 satellite: session ops run entirely on the single ordered
+    worker, so a finalize racing queued appends — across TWO interleaved
+    sessions, with field/pencil traffic mixed in — retires strictly after
+    them at every pipeline depth, and the containers are bitwise the
+    whole-sequence oracle."""
+
+    def _frames(self, n, seed):
+        rng = np.random.default_rng(seed)
+        base = (rng.standard_normal((12, 12)) * 0.5 + 4.0).cumsum(axis=0)
+        return [
+            np.ascontiguousarray(
+                base + 0.05 * t + 0.01 * rng.standard_normal((12, 12)), np.float32
+            )
+            for t in range(n)
+        ]
+
+    @pytest.mark.parametrize("depth", [1, 2])
+    def test_interleaved_sessions_finalize_after_queued_appends(self, depth):
+        from repro.core.temporal import TemporalCodec, TemporalConfig
+
+        svc = _service(depth)
+        cfg = _field_cfg()
+        stream = TemporalConfig(mode="field", keyframe_interval=2)
+        a_frames, b_frames = self._frames(4, seed=3), self._frames(4, seed=5)
+        sa = svc.open_session(cfg, stream, session_id="a")
+        sb = svc.open_session(cfg, stream, session_id="b")
+        rng = np.random.default_rng(SEED)
+        uids, appends = [], {"a": [], "b": []}
+        # interleave the two sessions' appends with unrelated traffic, then
+        # queue BOTH finalizes while every append is still queued
+        for t in range(4):
+            appends["a"].append(svc.submit_append(sa, t, a_frames[t]))
+            if t == 1:
+                uids.append(
+                    svc.submit_pencils(
+                        rng.standard_normal(100).astype(np.float32), 1e-3, 1e-3
+                    )
+                )
+            appends["b"].append(svc.submit_append(sb, t, b_frames[t]))
+            uids += [appends["a"][-1], appends["b"][-1]]
+        fa, fb = svc.submit_finalize(sa), svc.submit_finalize(sb)
+        res = svc.drain()
+        svc.close()
+        assert set(res) == set(uids) | {fa, fb}
+        assert all(r.ok for r in res.values()), {
+            u: r.error for u, r in res.items() if not r.ok
+        }
+        # every append acked with its own seq, in per-session FIFO order
+        for sid in ("a", "b"):
+            assert [res[u].payload.seq for u in appends[sid]] == [0, 1, 2, 3]
+            assert not any(res[u].payload.duplicate for u in appends[sid])
+        # the finalized containers are bitwise the whole-sequence oracle
+        codec = TemporalCodec(get_compressor("szlike"), cfg, stream=stream)
+        assert res[fa].payload == codec.compress_stream(a_frames)
+        assert res[fb].payload == codec.compress_stream(b_frames)
+
+    @pytest.mark.parametrize("depth", [1, 2])
+    def test_append_after_finalize_rejects_structurally(self, depth):
+        from repro.core.temporal import TemporalConfig
+
+        svc = _service(depth)
+        cfg = _field_cfg()
+        frames = self._frames(2, seed=7)
+        sid = svc.open_session(cfg, TemporalConfig(mode="field", keyframe_interval=2))
+        u0 = svc.submit_append(sid, 0, frames[0])
+        uf = svc.submit_finalize(sid)
+        # queued BEFORE the finalize retires, but ordered after it: the
+        # session is closed by the time this append runs
+        u1 = svc.submit_append(sid, 1, frames[1])
+        res = svc.drain()
+        svc.close()
+        assert res[u0].ok and res[uf].ok
+        assert not res[u1].ok
+        assert res[u1].error["type"] == "SessionNotFound"
+        assert svc.counters["rejected"] == 1

@@ -1,0 +1,560 @@
+"""Durable live-session gates (ISSUE 10).
+
+The session contract in test form:
+
+  journal      ``FFJR`` records round trip; truncation/bit flips at ANY byte
+               never raise from :func:`parse_journal` — they only shorten the
+               durable prefix.  A CLOSE record ends the log.
+  idempotency  a duplicate seq with identical content returns the cached
+               receipt (``duplicate=True``); different content, gaps, and
+               negative seqs raise :class:`SessionSequenceError`.
+  recovery     an intact journal restores bitwise — finalize after recovery
+               equals the uninterrupted container byte for byte; damaged
+               tails (truncated / bit-flipped) drop to the durable prefix
+               and the resumed stream still decodes within the claimed
+               bound; an unreplayable chain degrades by keyframe groups.
+  WAL          a frame's receipt is minted only after its journal record is
+               durable: an injected journal failure leaves the frame pending
+               and the retry re-journals WITHOUT re-encoding.
+  leases       expiry finalizes to a valid partial FFCS container (fetchable
+               from the tombstone); appends refresh the lease.
+  admission    ``max_sessions`` and the service's ``max_queue`` reject with
+               :class:`ResourceExhausted` at admission; history memory
+               pressure spills idle sessions to their journals and the next
+               append restores them, bitwise-neutrally.
+"""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.compressors import get_compressor
+from repro.core.errors import (
+    BlobCorruptError,
+    ResourceExhausted,
+    SessionError,
+    SessionNotFound,
+    SessionSequenceError,
+    StreamStateError,
+)
+from repro.core.ffcz import FFCzConfig
+from repro.core.temporal import TemporalCodec, TemporalConfig, TemporalStream
+from repro.runtime.faults import FaultConfig, FaultInjector
+from repro.serving import sessions as sz
+from repro.serving.ffcz_service import FFCzService, ServiceConfig
+from repro.serving.sessions import (
+    FileJournal,
+    MemoryJournal,
+    StreamSessionManager,
+    parse_journal,
+)
+
+pytestmark = pytest.mark.timeout(180)
+
+
+def _frames(n, shape=(16, 16), seed=0, drift=0.05):
+    rng = np.random.default_rng(seed)
+    base = (rng.standard_normal(shape) * 0.5 + 4.0).cumsum(axis=0)
+    mode = np.cos(np.linspace(0, 2 * np.pi, base.size)).reshape(shape)
+    out = []
+    for t in range(n):
+        x = base + drift * t * mode + 0.01 * rng.standard_normal(shape)
+        out.append(np.ascontiguousarray(x, dtype=np.float32))
+    return out
+
+
+FRAMES = _frames(6)
+
+# warm_start stays at its False default: the bitwise-recovery claims below
+# hold because cold re-encodes are deterministic
+CFG = FFCzConfig(E_rel=1e-3, Delta_rel=1e-3, max_iters=200)
+STREAM = TemporalConfig(mode="field", predictor="linear", keyframe_interval=2)
+
+
+def _manager(**kw):
+    return StreamSessionManager(get_compressor("szlike"), **kw)
+
+
+def _codec():
+    return TemporalCodec(get_compressor("szlike"), CFG, stream=STREAM)
+
+
+@pytest.fixture(scope="module")
+def ref_container():
+    """The uninterrupted whole-sequence container — the bitwise oracle."""
+    return _codec().compress_stream(FRAMES)
+
+
+@pytest.fixture(scope="module")
+def partial_journal():
+    """Journal bytes of a live session that appended frames 0..3 and then
+    "crashed" (no CLOSE record)."""
+    mgr = _manager()
+    jrn = MemoryJournal()
+    sid = mgr.open_session(CFG, STREAM, journal=jrn)
+    for t in range(4):
+        mgr.append_frame(sid, t, FRAMES[t])
+    return jrn.read()
+
+
+def _assert_bound(container, frames):
+    """Every decoded frame within the stream header's claimed bound."""
+    s = TemporalStream.from_bytes(container)
+    dec = _codec().decompress_stream(container)
+    assert len(dec) == len(frames)
+    for x, d in zip(frames, dec):
+        err = np.max(np.abs(d.astype(np.float64) - np.asarray(x, np.float64)))
+        assert err <= s.E * (1 + 1e-9)
+
+
+# -- journal wire format -----------------------------------------------------
+
+
+class TestJournalWire:
+    def test_roundtrip(self, partial_journal):
+        parsed = parse_journal(partial_journal)
+        assert not parsed.damaged and parsed.closed is None
+        assert parsed.open_info["stream"]["keyframe_interval"] == 2
+        assert [f.seq for f in parsed.frames] == [0, 1, 2, 3]
+        # keyframe flags follow the interval; digests match what was sent
+        assert [f.keyframe for f in parsed.frames] == [True, False, True, False]
+        for t, f in enumerate(parsed.frames):
+            assert f.frame_digest == hashlib.sha256(FRAMES[t].tobytes()).digest()
+            assert f.shape == (16, 16)
+
+    def test_truncation_never_raises(self, partial_journal):
+        # every truncation point: parse never raises and the durable frame
+        # count shrinks monotonically with the cut
+        prev = len(parse_journal(partial_journal).frames)
+        for keep in range(len(partial_journal), -1, -1):
+            parsed = parse_journal(partial_journal[:keep])
+            assert len(parsed.frames) <= prev
+            prev = len(parsed.frames)
+
+    def test_bitflip_keeps_prefix(self, partial_journal):
+        full = parse_journal(partial_journal)
+        step = max(1, len(partial_journal) // 97)
+        for pos in range(0, len(partial_journal), step):
+            bad = bytearray(partial_journal)
+            bad[pos] ^= 0x40
+            parsed = parse_journal(bytes(bad))
+            # a flip damages exactly one record; the walk stops there, so the
+            # surviving frames are a byte-exact prefix of the original log —
+            # a CRC failure never fabricates, alters, or reorders a frame
+            assert parsed.damaged
+            assert len(parsed.frames) < len(full.frames)
+            for got, want in zip(parsed.frames, full.frames):
+                assert got.seq == want.seq and got.payload == want.payload
+
+    def test_close_ends_log(self):
+        data = (
+            sz._record(sz._J_OPEN, b'{"v": 1}')
+            + sz._record(sz._J_CLOSE, bytes([1]))
+            + sz._record(sz._J_OPEN, b'{"v": 2}')
+        )
+        parsed = parse_journal(data)
+        assert parsed.closed == "finalized"
+        assert parsed.open_info == {"v": 1}
+
+    def test_unknown_record_type_stops_walk(self):
+        data = sz._record(sz._J_OPEN, b'{"v": 1}') + sz._record(9, b"??")
+        parsed = parse_journal(data)
+        assert parsed.damaged and parsed.open_info == {"v": 1}
+
+    def test_file_journal(self, tmp_path):
+        path = str(tmp_path / "s.wal")
+        j = FileJournal(path)
+        j.append(sz._record(sz._J_OPEN, b'{"v": 1}'))
+        assert j.size() == len(j.read())
+        j.close()
+        # reopen appends, does not truncate (a restarted service resumes)
+        j2 = FileJournal(path)
+        j2.append(sz._record(sz._J_CLOSE, bytes([2])))
+        parsed = parse_journal(j2.read())
+        j2.close()
+        assert parsed.open_info == {"v": 1} and parsed.closed == "aborted"
+
+
+# -- idempotent append -------------------------------------------------------
+
+
+class TestIdempotentAppend:
+    @pytest.fixture()
+    def live(self):
+        mgr = _manager()
+        sid = mgr.open_session(CFG, STREAM)
+        for t in range(3):
+            mgr.append_frame(sid, t, FRAMES[t])
+        return mgr, sid
+
+    def test_receipts(self, live):
+        mgr, sid = live
+        assert mgr.next_seq(sid) == 3
+        st = mgr.session_stats(sid)
+        assert st.n_frames == 3 and st.state == "open"
+
+    def test_duplicate_returns_cached_receipt(self, live):
+        mgr, sid = live
+        first = mgr.append_frame(sid, 1, FRAMES[1])
+        assert first.duplicate
+        again = mgr.append_frame(sid, 1, FRAMES[1])
+        assert again.duplicate and again.digest == first.digest
+        assert again.frame_digest == hashlib.sha256(FRAMES[1].tobytes()).hexdigest()
+        assert mgr.counters["duplicates"] == 2
+        # the duplicate did not append anything
+        assert mgr.next_seq(sid) == 3
+
+    def test_duplicate_with_different_content_rejects(self, live):
+        mgr, sid = live
+        with pytest.raises(SessionSequenceError) as ei:
+            mgr.append_frame(sid, 1, FRAMES[1] + 1.0)
+        assert ei.value.expected == 3 and ei.value.got == 1
+        assert mgr.counters["sequence_rejects"] == 1
+
+    def test_gap_rejects(self, live):
+        mgr, sid = live
+        with pytest.raises(SessionSequenceError) as ei:
+            mgr.append_frame(sid, 5, FRAMES[4])
+        assert ei.value.expected == 3 and ei.value.got == 5
+        # the session survives a sequence reject: the right seq still lands
+        r = mgr.append_frame(sid, 3, FRAMES[3])
+        assert r.seq == 3 and not r.duplicate
+
+    def test_negative_seq_rejects(self, live):
+        mgr, sid = live
+        with pytest.raises(SessionSequenceError):
+            mgr.append_frame(sid, -1, FRAMES[0])
+
+    def test_append_after_finalize_rejects(self, live):
+        mgr, sid = live
+        container = mgr.finalize(sid)
+        assert container[:4] == b"FFCS"
+        with pytest.raises(SessionNotFound):
+            mgr.append_frame(sid, 3, FRAMES[3])
+        assert mgr.closed_info(sid)["container"] == container
+
+    def test_empty_finalize_rejects(self):
+        mgr = _manager()
+        sid = mgr.open_session(CFG, STREAM)
+        with pytest.raises(SessionError):
+            mgr.finalize(sid)
+        mgr.abort(sid)
+        assert mgr.closed_info(sid)["reason"] == "aborted"
+
+
+# -- session container vs the whole-sequence oracle --------------------------
+
+
+class TestSessionContainer:
+    def test_bitwise_equals_compress_stream(self, ref_container):
+        mgr = _manager()
+        sid = mgr.open_session(CFG, STREAM)
+        for t, x in enumerate(FRAMES):
+            r = mgr.append_frame(sid, t, x)
+            assert r.seq == t and r.keyframe == (t % 2 == 0)
+        assert mgr.finalize(sid) == ref_container
+
+    def test_journal_payloads_match_container(self, ref_container):
+        mgr = _manager()
+        jrn = MemoryJournal()
+        sid = mgr.open_session(CFG, STREAM, journal=jrn)
+        for t, x in enumerate(FRAMES):
+            mgr.append_frame(sid, t, x)
+        mgr.finalize(sid)
+        parsed = parse_journal(jrn.read())
+        assert parsed.closed == "finalized"
+        s = TemporalStream.from_bytes(ref_container)
+        for t, f in enumerate(parsed.frames):
+            assert f.payload == s.frame_payload(t)
+
+
+# -- crash recovery (the acceptance gate) ------------------------------------
+
+
+class TestRecovery:
+    def test_intact_journal_restores_bitwise(self, partial_journal, ref_container):
+        mgr = _manager()
+        sid = mgr.recover(partial_journal)
+        assert mgr.next_seq(sid) == 4
+        assert mgr.counters["recoveries"] == 1
+        assert mgr.counters["recovered_frames"] == 4
+        assert mgr.counters["resyncs"] == 0
+        # recovered receipts are marked; a client retry of an already-durable
+        # seq is still idempotent across the crash
+        dup = mgr.append_frame(sid, 1, FRAMES[1])
+        assert dup.duplicate and dup.restored
+        for t in range(4, 6):
+            r = mgr.append_frame(sid, t, FRAMES[t])
+            assert not r.restored
+        assert mgr.finalize(sid) == ref_container
+
+    @pytest.mark.parametrize("damage", ["truncate", "bitflip"])
+    def test_damaged_tail_resumes_from_durable_prefix(
+        self, damage, partial_journal, ref_container
+    ):
+        if damage == "truncate":
+            data = partial_journal[:-10]
+        else:
+            bad = bytearray(partial_journal)
+            bad[-20] ^= 0x10  # inside the last FRAME record
+            data = bytes(bad)
+        mgr = _manager()
+        out = MemoryJournal()
+        sid = mgr.recover(data, journal_out=out)
+        # the damaged record is exactly the last frame: CRC drops it
+        assert mgr.next_seq(sid) == 3
+        # the compacted journal holds only the durable prefix
+        parsed = parse_journal(out.read())
+        assert not parsed.damaged and len(parsed.frames) == 3
+        # the client resumes from next_seq; the result is the same stream
+        for t in range(3, 6):
+            mgr.append_frame(sid, t, FRAMES[t])
+        container = mgr.finalize(sid)
+        assert container == ref_container
+        _assert_bound(container, FRAMES)
+
+    def test_unreplayable_chain_drops_keyframe_group(self, partial_journal):
+        # rebuild the journal with frame 3's payload replaced by garbage
+        # under a VALID record CRC: parse keeps it, replay cannot decode it,
+        # so recovery degrades to the previous keyframe group (frames 0..1)
+        parsed = parse_journal(partial_journal)
+        f0 = parsed.frames[0]
+        data = sz._record(
+            sz._J_OPEN,
+            sz._config_json(CFG, STREAM, str(parsed.open_info["session_id"])),
+        )
+        for f in parsed.frames[:3]:
+            data += sz._frame_record(
+                f.seq, f.keyframe, f.frame_digest, f.E0, f.Delta0,
+                f.shape, f.block, f.payload,
+            )
+        data += sz._frame_record(
+            3, False, b"\x00" * 32, f0.E0, f0.Delta0, f0.shape, f0.block,
+            b"not a frame payload",
+        )
+        mgr = _manager()
+        sid = mgr.recover(data)
+        assert mgr.next_seq(sid) == 2
+        assert mgr.counters["resyncs"] == 1
+        assert mgr.counters["recovered_frames"] == 2
+        # the session is live and bound-conformant from the durable prefix
+        for t in range(2, 4):
+            mgr.append_frame(sid, t, FRAMES[t])
+        _assert_bound(mgr.finalize(sid), FRAMES[:4])
+
+    def test_closed_journal_rejects(self):
+        mgr = _manager()
+        jrn = MemoryJournal()
+        sid = mgr.open_session(CFG, STREAM, journal=jrn)
+        mgr.append_frame(sid, 0, FRAMES[0])
+        mgr.finalize(sid)
+        with pytest.raises(SessionNotFound):
+            _manager().recover(jrn.read())
+
+    def test_garbage_journal_rejects(self):
+        with pytest.raises(BlobCorruptError):
+            _manager().recover(b"not a journal at all")
+
+    def test_open_record_without_config_rejects(self):
+        data = sz._record(sz._J_OPEN, b'{"v": 1}')
+        with pytest.raises(BlobCorruptError):
+            _manager().recover(data)
+
+    def test_recover_respects_admission(self, partial_journal):
+        mgr = _manager(max_sessions=1)
+        mgr.open_session(CFG, STREAM, session_id="occupant")
+        with pytest.raises(ResourceExhausted):
+            mgr.recover(partial_journal)
+
+
+# -- write-ahead discipline under injected journal faults --------------------
+
+
+class TestWalDiscipline:
+    def test_journal_fault_leaves_frame_pending_then_replays(self, ref_container):
+        inj = FaultInjector(
+            FaultConfig(p_session_journal=1.0, max_per_site=1), seed=3
+        )
+        mgr = _manager(injector=inj)
+        sid = mgr.open_session(CFG, STREAM)
+        # every first attempt's WAL write fails AFTER the frame encoded —
+        # the frame is never acked and stays pending
+        with pytest.raises(OSError):
+            mgr.append_frame(sid, 0, FRAMES[0], fire_uid="a0")
+        assert mgr.next_seq(sid) == 0
+        # the retry re-journals the pending encode instead of re-encoding
+        r = mgr.append_frame(sid, 0, FRAMES[0], fire_uid="a0")
+        assert r.seq == 0 and not r.duplicate
+        assert mgr.session_stats(sid).pending_replays == 1
+        # a retry with DIFFERENT content against the pending frame rejects
+        with pytest.raises(OSError):
+            mgr.append_frame(sid, 1, FRAMES[1], fire_uid="a1")
+        with pytest.raises(SessionSequenceError):
+            mgr.append_frame(sid, 1, FRAMES[1] + 1.0, fire_uid="a1")
+        mgr.append_frame(sid, 1, FRAMES[1], fire_uid="a1")
+        for t in range(2, 6):
+            with pytest.raises(OSError):
+                mgr.append_frame(sid, t, FRAMES[t], fire_uid=f"a{t}")
+            mgr.append_frame(sid, t, FRAMES[t], fire_uid=f"a{t}")
+        assert mgr.session_stats(sid).pending_replays == 6
+        # finalize's CLOSE write hits the same site, then its retry lands;
+        # pending replays never double-commit: still the oracle container
+        with pytest.raises(OSError):
+            mgr.finalize(sid, fire_uid="fin")
+        assert mgr.finalize(sid, fire_uid="fin") == ref_container
+
+    def test_finalize_close_fault_is_retryable(self):
+        inj = FaultInjector(
+            FaultConfig(p_session_journal=1.0, max_per_site=1), seed=3
+        )
+        mgr = _manager(injector=inj)
+        sid = mgr.open_session(CFG, STREAM)
+        with pytest.raises(OSError):
+            mgr.append_frame(sid, 0, FRAMES[0], fire_uid="b0")
+        mgr.append_frame(sid, 0, FRAMES[0], fire_uid="b0")
+        with pytest.raises(OSError):
+            mgr.finalize(sid, fire_uid="fin")
+        # the container was assembled; the session is sealed against appends
+        with pytest.raises(SessionNotFound):
+            mgr.append_frame(sid, 1, FRAMES[1], fire_uid="b1")
+        # the finalize retry does not call finish() twice
+        container = mgr.finalize(sid, fire_uid="fin")
+        _assert_bound(container, FRAMES[:1])
+
+
+# -- leases ------------------------------------------------------------------
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class TestLeases:
+    def test_expiry_finalizes_partial_container(self):
+        clk = _Clock()
+        mgr = _manager(lease_s=10.0, clock=clk)
+        sid = mgr.open_session(CFG, STREAM)
+        mgr.append_frame(sid, 0, FRAMES[0])
+        mgr.append_frame(sid, 1, FRAMES[1])
+        clk.t = 100.0
+        assert mgr.sweep() == [sid]
+        assert mgr.counters["lease_evictions"] == 1
+        with pytest.raises(SessionNotFound):
+            mgr.append_frame(sid, 2, FRAMES[2])
+        tomb = mgr.closed_info(sid)
+        assert tomb["reason"] == "lease_expired" and tomb["n_frames"] == 2
+        # the evicted session is a VALID partial stream, fetchable post-mortem
+        _assert_bound(tomb["container"], FRAMES[:2])
+
+    def test_empty_session_expiry_aborts(self):
+        clk = _Clock()
+        mgr = _manager(lease_s=10.0, clock=clk)
+        sid = mgr.open_session(CFG, STREAM)
+        clk.t = 11.0
+        assert mgr.sweep() == [sid]
+        tomb = mgr.closed_info(sid)
+        assert tomb["reason"] == "lease_expired" and tomb["container"] is None
+
+    def test_append_refreshes_lease(self):
+        clk = _Clock()
+        mgr = _manager(lease_s=10.0, clock=clk)
+        sid = mgr.open_session(CFG, STREAM)
+        for t, at in enumerate((0.0, 8.0, 16.0)):
+            clk.t = at
+            mgr.append_frame(sid, t, FRAMES[t])
+        clk.t = 25.0  # 9s after the last append: still leased
+        assert mgr.sweep() == []
+        assert mgr.session_stats(sid).lease_remaining_s > 0
+        clk.t = 27.0
+        assert mgr.sweep() == [sid]
+
+    def test_expired_sessions_swept_at_admission(self):
+        clk = _Clock()
+        mgr = _manager(lease_s=10.0, clock=clk, max_sessions=1)
+        mgr.open_session(CFG, STREAM)
+        clk.t = 11.0
+        # the expired session frees its slot before the admission check
+        sid2 = mgr.open_session(CFG, STREAM)
+        assert mgr.live_sessions == [sid2]
+
+
+# -- admission + memory pressure ---------------------------------------------
+
+
+class TestAdmissionAndSpill:
+    def test_max_sessions_rejects_at_admission(self):
+        mgr = _manager(max_sessions=2)
+        a = mgr.open_session(CFG, STREAM)
+        mgr.open_session(CFG, STREAM)
+        with pytest.raises(ResourceExhausted) as ei:
+            mgr.open_session(CFG, STREAM)
+        assert ei.value.stage == "admit"
+        mgr.append_frame(a, 0, FRAMES[0])
+        mgr.finalize(a)
+        mgr.open_session(CFG, STREAM)  # slot freed
+
+    def test_service_max_queue_rejects_at_admission(self):
+        svc = FFCzService(
+            get_compressor("szlike"),
+            config=ServiceConfig(max_queue=2, pipeline_depth=1),
+        )
+        svc.submit_compress(FRAMES[0], CFG)
+        svc.submit_compress(FRAMES[1], CFG)
+        with pytest.raises(ResourceExhausted) as ei:
+            svc.submit_compress(FRAMES[2], CFG)
+        assert ei.value.stage == "admit"
+        assert all(r.ok for r in svc.drain().values())
+        svc.close()
+
+    def test_service_creates_journal_dir(self, tmp_path):
+        # --session-journal-dir may point at a directory that does not exist
+        # yet (fresh deploy); the service must create it, not crash the
+        # first open_session
+        jdir = tmp_path / "wal" / "journals"
+        svc = FFCzService(
+            get_compressor("szlike"),
+            config=ServiceConfig(
+                pipeline_depth=1, session_journal_dir=str(jdir)
+            ),
+        )
+        sid = svc.open_session(CFG, STREAM, session_id="jd")
+        uid = svc.submit_append(sid, 0, FRAMES[0])
+        assert svc.drain()[uid].ok
+        assert (jdir / "jd.wal").exists()
+        svc.close()
+
+    def test_roi_config_rejected_for_sessions(self):
+        mgr = _manager()
+        roi_cfg = FFCzConfig(
+            E_rel=1e-3, Delta_rel=1e-3, E_roi=np.ones((16, 16), bool)
+        )
+        with pytest.raises(ValueError):
+            mgr.open_session(roi_cfg, STREAM)
+        assert mgr.live_sessions == []
+
+    def test_spill_and_resume_is_bitwise_neutral(self):
+        # one 16x16 float32 frame is 1 KiB of history; a session holds at
+        # most two.  3000 bytes forces the idle session out when the second
+        # one starts appending.
+        mgr = _manager(max_history_bytes=3000)
+        other = _frames(2, seed=9)
+        s1 = mgr.open_session(CFG, STREAM)
+        mgr.append_frame(s1, 0, FRAMES[0])
+        mgr.append_frame(s1, 1, FRAMES[1])
+        s2 = mgr.open_session(CFG, STREAM)
+        mgr.append_frame(s2, 0, other[0])
+        assert mgr.counters["spills"] == 1
+        assert mgr.session_stats(s1).state == "spilled"
+        # the next append to the spilled session restores it from its journal
+        r = mgr.append_frame(s1, 2, FRAMES[2])
+        assert r.seq == 2
+        st = mgr.session_stats(s1)
+        assert st.state == "open" and st.restores == 1
+        assert mgr.counters["restores"] == 1
+        ref = _codec().compress_stream(FRAMES[:3])
+        assert mgr.finalize(s1) == ref

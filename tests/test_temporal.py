@@ -26,7 +26,7 @@ import pytest
 
 from repro.compressors import get_compressor
 from repro.core.engine import default_engine
-from repro.core.errors import BlobCorruptError
+from repro.core.errors import BlobCorruptError, FFCzError, StreamStateError
 from repro.core.ffcz import FFCz, FFCzConfig
 from repro.core.temporal import TemporalCodec, TemporalConfig, TemporalStream
 from repro.serving.ffcz_service import FFCzService, ServiceConfig
@@ -283,3 +283,83 @@ class TestServiceStream:
         )
         res = svc.drain()[u]
         assert not res.ok and "pspec" in str(res.error)
+
+
+class TestEncoderTerminalState:
+    """``finish()`` is terminal (ISSUE 10): committed state can neither be
+    mutated nor re-emitted afterwards — the session layer's finalize-vs-append
+    serialization rests on this raising structurally instead of corrupting."""
+
+    def _finished(self):
+        codec = _codec("field", warm_start=False, interval=2)
+        enc = codec.open_stream()
+        frames = _frames(3, shape=(12, 12), seed=6)
+        for x in frames:
+            enc.add_frame(x)
+        return codec, enc, frames, enc.finish()
+
+    def test_add_frame_after_finish_raises(self):
+        _codec_, enc, frames, _data = self._finished()
+        assert enc.finished
+        with pytest.raises(StreamStateError, match="finished stream"):
+            enc.add_frame(frames[0])
+        # structured: a service/session layer catches it as an FFCzError
+        with pytest.raises(FFCzError):
+            enc.add_frame(frames[0])
+
+    def test_double_finish_raises(self):
+        _codec_, enc, _frames_, data = self._finished()
+        with pytest.raises(StreamStateError, match="twice"):
+            enc.finish()
+        # the first container stays valid — the guard protects, not poisons
+        assert TemporalStream.from_bytes(data).n_frames == 3
+
+    def test_failed_add_frame_is_retryable_not_terminal(self):
+        codec, enc, frames, _data = self._finished()
+        enc2 = codec.open_stream()
+        enc2.add_frame(frames[0])
+        with pytest.raises(ValueError, match="shape"):
+            enc2.add_frame(np.zeros((4, 4), np.float32))
+        # a FAILED add_frame never finishes the stream: the retry lands
+        assert not enc2.finished
+        enc2.add_frame(frames[1])
+        assert enc2.n_frames == 2
+
+    def test_export_restore_roundtrip_is_bitwise(self):
+        frames = _frames(6, shape=(12, 12), seed=8)
+        codec = _codec("field", warm_start=False, interval=2)
+        ref = codec.compress_stream(frames)
+        enc = codec.open_stream()
+        for x in frames[:4]:
+            enc.add_frame(x)
+        state = enc.export_state()
+        enc2 = codec.restore_stream(
+            state["frames"],
+            shape=state["shape"],
+            block=state["block"],
+            E0=state["E0"],
+            Delta0=state["Delta0"],
+        )
+        for x in frames[4:]:
+            enc2.add_frame(x)
+        assert enc2.finish() == ref
+
+    def test_restore_rejects_foreign_keyframe_cadence(self):
+        frames = _frames(4, shape=(12, 12), seed=8)
+        codec = _codec("field", warm_start=False, interval=2)
+        enc = codec.open_stream()
+        for x in frames:
+            enc.add_frame(x)
+        state = enc.export_state()
+        other = _codec("field", warm_start=False, interval=3)
+        with pytest.raises(BlobCorruptError, match="different stream config"):
+            other.restore_stream(
+                state["frames"],
+                shape=state["shape"],
+                E0=state["E0"],
+                Delta0=state["Delta0"],
+            )
+        with pytest.raises(ValueError, match="empty"):
+            codec.restore_stream(
+                [], shape=state["shape"], E0=state["E0"], Delta0=state["Delta0"]
+            )
